@@ -1,0 +1,83 @@
+"""Paper §7.3: echo server — UDP bandwidth vs packet size, GENESYS
+sendto/recvfrom path vs the CPU baseline loop."""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+from repro.serving.server import CpuBaselineUdpServer, GenesysUdpServer
+from benchmarks.common import emit, make_gsys
+
+N_PACKETS = 200
+
+
+def _drive(server_port: int, payload: int, n: int, client,
+           burst: int = 8) -> float:
+    """Pipelined load generator (the paper's): send a burst, then collect
+    the replies, so server-side batching can engage."""
+    msg = bytes(payload)
+    got = 0
+    t0 = time.monotonic()
+    for _ in range(n // burst):
+        for _ in range(burst):
+            client.sendto(msg, ("127.0.0.1", server_port))
+        for _ in range(burst):
+            try:
+                client.recvfrom(payload + 64)
+                got += 1
+            except socket.timeout:
+                pass
+    dt = time.monotonic() - t0
+    assert got >= n * 0.8, f"lost too many packets ({got}/{n})"
+    return dt
+
+
+def run() -> None:
+    for payload in (512, 2048, 4096):
+        # GENESYS path
+        g = make_gsys(n_workers=4)
+        srv = GenesysUdpServer(g, port=0, max_batch=8,
+                       batch_window_s=0.0002, payload=payload + 64)
+        port = g.table._sockets[srv.fd].getsockname()[1]
+        client = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        client.bind(("127.0.0.1", 0))
+        client.settimeout(2)
+        cport = client.getsockname()[1]
+        th = threading.Thread(
+            target=srv.serve_echo,
+            kwargs=dict(n_batches=N_PACKETS, reply_port=cport,
+                        n_requests=N_PACKETS),
+            daemon=True)
+        th.start()
+        dt = _drive(port, payload, N_PACKETS, client)
+        th.join(5)
+        bw = N_PACKETS * payload / dt / 1e6
+        emit(f"case_network/genesys_{payload}B", dt * 1e6 / N_PACKETS,
+             f"{bw:.1f}MBps")
+        srv.close()
+        client.close()
+        g.shutdown()
+
+        # CPU baseline
+        srv2 = CpuBaselineUdpServer(port=0, payload=payload + 64)
+        port2 = srv2.sock.getsockname()[1]
+        client2 = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        client2.bind(("127.0.0.1", 0))
+        client2.settimeout(2)
+        cport2 = client2.getsockname()[1]
+        th2 = threading.Thread(
+            target=srv2.serve_echo,
+            kwargs=dict(n_batches=N_PACKETS, reply_port=cport2), daemon=True)
+        th2.start()
+        dt2 = _drive(port2, payload, N_PACKETS, client2)
+        th2.join(5)
+        bw2 = N_PACKETS * payload / dt2 / 1e6
+        emit(f"case_network/cpu_{payload}B", dt2 * 1e6 / N_PACKETS,
+             f"{bw2:.1f}MBps")
+        srv2.close()
+        client2.close()
+
+
+if __name__ == "__main__":
+    run()

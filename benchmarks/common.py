@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.genesys import Genesys, GenesysConfig, Sys
+
+
+def make_gsys(**kw) -> Genesys:
+    return Genesys(GenesysConfig(**kw))
+
+
+def make_file(nbytes: int, directory: str | None = None) -> str:
+    path = tempfile.mktemp(dir=directory or "/dev/shm"
+                           if os.path.isdir("/dev/shm") else None)
+    rng = np.random.default_rng(0)
+    with open(path, "wb") as f:
+        f.write(rng.integers(0, 256, size=nbytes, dtype=np.uint8).tobytes())
+    return path
+
+
+def open_ro(g: Genesys, path: str) -> int:
+    ph = g.heap.register_bytes(path.encode())
+    fd = g.call(Sys.OPEN, ph, os.O_RDONLY, 0)
+    assert fd >= 0, (path, fd)
+    return fd
+
+
+def timeit(fn, *, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        fn()
+        best = min(best, time.monotonic() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)

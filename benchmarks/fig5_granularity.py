@@ -1,0 +1,89 @@
+"""Paper Fig 5: system-call invocation granularity.
+
+(left)  pread a file of size X at work-item / work-group / kernel
+        granularity; (right) work-group size sweep.
+
+work-item: one slot per 4KB page (batched WORK_ITEM invocation);
+work-group: one slot per `wg_pages`-page block;
+kernel: a single pread for the whole file.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.genesys import Granularity, Ordering, Sys
+from repro.core.genesys.invoke import pack_args
+from benchmarks.common import emit, make_file, make_gsys, open_ro, timeit
+
+PAGE = 4096
+
+
+def _read_at(g, fd, nbytes: int, chunk: int, granularity, hw=0):
+    n_chunks = nbytes // chunk
+    bh = g.heap.new_buffer(nbytes)
+    if granularity == Granularity.WORK_ITEM:
+        args = jnp.stack([
+            pack_args(fd, bh, chunk, i * chunk, i * chunk)
+            for i in range(n_chunks)])
+        def step(x):
+            res = g.invoke(Sys.PREAD64, args,
+                           granularity=Granularity.WORK_ITEM,
+                           ordering=Ordering.STRONG, blocking=True)
+            return res.ret64()
+    elif granularity == Granularity.WORK_GROUP:
+        packed = [pack_args(fd, bh, chunk, i * chunk, i * chunk)
+                  for i in range(n_chunks)]
+        def step(x):
+            outs = []
+            for a in packed:
+                res = g.invoke(Sys.PREAD64, a,
+                               granularity=Granularity.WORK_GROUP,
+                               ordering=Ordering.RELAXED_CONSUMER,
+                               blocking=True, deps=x)
+                outs.append(res.ret64())
+            return jnp.stack(outs)
+    else:
+        a = pack_args(fd, bh, nbytes, 0, 0)
+        def step(x):
+            res = g.invoke(Sys.PREAD64, a, granularity=Granularity.KERNEL,
+                           ordering=Ordering.RELAXED_CONSUMER, blocking=True)
+            return res.ret64()
+    fn = jax.jit(step)
+    fn(jnp.zeros(1)).block_until_ready()   # compile
+    out = timeit(lambda: fn(jnp.zeros(1)).block_until_ready())
+    g.heap.release(bh)
+    return out
+
+
+def run() -> None:
+    g = make_gsys(n_workers=4, coalesce_window_us=100, coalesce_max=16)
+    try:
+        # (left) granularity x file size
+        for mb in (1, 4, 16):
+            nbytes = mb * 1024 * 1024
+            path = make_file(nbytes)
+            fd = open_ro(g, path)
+            for gran, chunk in [(Granularity.WORK_ITEM, PAGE),
+                                (Granularity.WORK_GROUP, 64 * PAGE),
+                                (Granularity.KERNEL, nbytes)]:
+                dt = _read_at(g, fd, nbytes, chunk, gran)
+                emit(f"fig5/pread_{mb}MB_{gran.value}", dt * 1e6,
+                     f"{nbytes / dt / 1e6:.0f}MBps")
+            g.call(Sys.CLOSE, fd)
+        # (right) work-group size sweep (pages per group)
+        nbytes = 8 * 1024 * 1024
+        path = make_file(nbytes)
+        fd = open_ro(g, path)
+        for wg_pages in (16, 64, 256):
+            dt = _read_at(g, fd, nbytes, wg_pages * PAGE,
+                          Granularity.WORK_GROUP)
+            emit(f"fig5/wgsize_{wg_pages}pages", dt * 1e6,
+                 f"{nbytes / dt / 1e6:.0f}MBps")
+        g.call(Sys.CLOSE, fd)
+    finally:
+        g.shutdown()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Paper Fig 6: blocking x ordering on a block-permutation workload.
+
+Work-groups permute independent 8KB blocks (the paper's DES-like
+permutation); results are written with pwrite at work-group granularity
+under the four {strong, weak} x {blocking, non-blocking} combinations.
+The compute:syscall ratio is swept via the permutation iteration count.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.genesys import Granularity, Ordering, Sys
+from repro.core.genesys.invoke import pack_args
+from benchmarks.common import emit, make_gsys, timeit
+
+N_GROUPS = 16
+BLOCK = 8192  # bytes per group (paper: 8KB blocks)
+
+
+def run() -> None:
+    g = make_gsys(n_workers=4)
+    path = tempfile.mktemp()
+    ph = g.heap.register_bytes(path.encode())
+    fd = g.call(Sys.OPEN, ph, os.O_CREAT | os.O_WRONLY, 0o644)
+    out_h = g.heap.new_buffer(N_GROUPS * BLOCK)
+
+    perm = jnp.asarray(np.random.default_rng(0).permutation(BLOCK))
+    data = jnp.asarray(np.random.default_rng(1).integers(
+        0, 255, size=(N_GROUPS, BLOCK), dtype=np.uint8).astype(np.float32))
+
+    modes = {
+        "strong-block": (Ordering.STRONG, True),
+        "strong-nonblock": (Ordering.STRONG, False),
+        "weak-block": (Ordering.RELAXED_PRODUCER, True),
+        "weak-nonblock": (Ordering.RELAXED_PRODUCER, False),
+    }
+
+    def build(iters: int, ordering, blocking):
+        packed = [pack_args(fd, out_h, BLOCK, i * BLOCK, i * BLOCK)
+                  for i in range(N_GROUPS)]
+
+        def step(x):
+            def body(i, v):
+                return v[:, perm]
+            y = jax.lax.fori_loop(0, iters, body, x)
+            outs = y.sum()
+            for a in packed:
+                res = g.invoke(Sys.PWRITE64, a,
+                               granularity=Granularity.WORK_GROUP,
+                               ordering=ordering, blocking=blocking, deps=y)
+                if blocking:
+                    outs = res.tie(outs)
+            return outs
+        return jax.jit(step)
+
+    try:
+        for iters in (1, 8, 32):
+            for name, (ordering, blocking) in modes.items():
+                fn = build(iters, ordering, blocking)
+                fn(data).block_until_ready()
+                g.drain()
+                def once():
+                    fn(data).block_until_ready()
+                    g.drain()
+                dt = timeit(once)
+                emit(f"fig6/iters{iters}_{name}", dt * 1e6 / iters,
+                     f"{dt*1e3:.2f}ms_total")
+    finally:
+        g.call(Sys.CLOSE, fd)
+        g.shutdown()
+        os.unlink(path)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Fig 7: interrupt coalescing — latency per requested byte with and
+without coalescing (up to 8 calls per bundle), across read sizes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.genesys import Granularity, Ordering, Sys
+from repro.core.genesys.invoke import pack_args
+from benchmarks.common import emit, make_file, make_gsys, open_ro, timeit
+
+N_CALLS = 64
+
+
+def _bench(g, fd, read_bytes: int) -> float:
+    bh = g.heap.new_buffer(read_bytes * N_CALLS)
+    args = jnp.stack([
+        pack_args(fd, bh, read_bytes, i * read_bytes, i * read_bytes)
+        for i in range(N_CALLS)])
+
+    def step(x):
+        res = g.invoke(Sys.PREAD64, args, granularity=Granularity.WORK_ITEM,
+                       ordering=Ordering.STRONG, blocking=True)
+        return res.ret64()
+
+    fn = jax.jit(step)
+    fn(jnp.zeros(1)).block_until_ready()
+    dt = timeit(lambda: fn(jnp.zeros(1)).block_until_ready())
+    g.heap.release(bh)
+    return dt
+
+
+def run() -> None:
+    for label, kw in [("nocoalesce", dict(coalesce_window_us=0,
+                                          coalesce_max=1)),
+                      ("coalesce8", dict(coalesce_window_us=300,
+                                         coalesce_max=8))]:
+        g = make_gsys(n_workers=2, **kw)
+        try:
+            path = make_file(8 * 1024 * 1024)
+            fd = open_ro(g, path)
+            for kb in (4, 64, 512):
+                dt = _bench(g, fd, kb * 1024)
+                total = kb * 1024 * N_CALLS
+                emit(f"fig7/read{kb}KB_{label}", dt * 1e6 / N_CALLS,
+                     f"{dt / total * 1e9:.2f}ns_per_byte")
+            mean_c = g.executor.stats.mean_coalesce()
+            emit(f"fig7/meanbundle_{label}", mean_c, "calls_per_bundle")
+            g.call(Sys.CLOSE, fd)
+        finally:
+            g.shutdown()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Roofline table from experiments/dryrun.json (cells produced by
+repro.launch.dryrun). Prints CSV rows and can emit the EXPERIMENTS.md
+markdown table."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "experiments" / "dryrun.json"
+
+
+def load():
+    return json.loads(RESULTS.read_text())
+
+
+def run() -> None:
+    res = load()
+    for k in sorted(res):
+        v = res[k]
+        if v.get("status") != "ok":
+            print(f"roofline/{k},0,ERROR")
+            continue
+        rl = v["roofline"]
+        dom = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+               "collective": rl["collective_s"]}[rl["bottleneck"]]
+        print(f"roofline/{k},{dom * 1e6:.0f},"
+              f"bottleneck={rl['bottleneck']}"
+              f"_useful={rl['useful_flops_ratio']:.3f}"
+              f"_peakGiB={v['memory']['peak_bytes_dev'] / 2**30:.1f}")
+
+
+def markdown(single_pod_only: bool = True) -> str:
+    res = load()
+    rows = []
+    for k in sorted(res):
+        v = res[k]
+        arch, shape, mesh_ = k.split("|")[:3]
+        if single_pod_only and mesh_ != "single":
+            continue
+        if v.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR | | | | | |")
+            continue
+        rl, m, c = v["roofline"], v["memory"], v["cost"]
+        rows.append(
+            f"| {arch} | {shape} | {rl['compute_s']:.3f} "
+            f"| {rl['memory_s']:.3f} | {rl['collective_s']:.3f} "
+            f"| **{rl['bottleneck']}** | {rl['useful_flops_ratio']:.3f} "
+            f"| {m['peak_bytes_dev'] / 2**30:.1f} |")
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s "
+           "| bottleneck | useful ratio | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

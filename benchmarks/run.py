@@ -1,0 +1,39 @@
+# One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (case_memory, case_network, case_storage,
+                            fig5_granularity, fig6_ordering, fig7_coalescing,
+                            roofline_report)
+    suites = [
+        ("fig5_granularity", fig5_granularity.run),
+        ("fig6_ordering", fig6_ordering.run),
+        ("fig7_coalescing", fig7_coalescing.run),
+        ("case_storage", case_storage.run),
+        ("case_memory", case_memory.run),
+        ("case_network", case_network.run),
+        ("roofline_report", roofline_report.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

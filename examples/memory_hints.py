@@ -1,0 +1,39 @@
+"""miniAMR-style adaptive memory (paper §7.2): a refinement loop releases
+coarse-phase buffers with madvise(DONTNEED) via GENESYS, shrinking RSS.
+
+  PYTHONPATH=src python examples/memory_hints.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.genesys import Genesys, GenesysConfig, Sys
+from repro.core.genesys.memory_pool import MADV_DONTNEED
+
+g = Genesys(GenesysConfig(n_workers=2))
+MB = 1024 * 1024
+
+
+@jax.jit
+def stencil(x):
+    return (x + jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0)) / 3.0
+
+
+prev = None
+for phase, (level, nbytes) in enumerate([(4, 128 * MB), (2, 32 * MB),
+                                         (1, 8 * MB)]):
+    addr = g.pool.mmap(nbytes)
+    g.pool.touch(addr)
+    x = jnp.ones((256 * level, 256), jnp.float32)
+    for _ in range(3):
+        x = stencil(x)
+    x.block_until_ready()
+    print(f"phase {phase} (refinement {level}): RSS = "
+          f"{g.pool.rss_bytes // MB} MB")
+    if prev is not None:
+        # release the previous phase: non-blocking weak madvise (paper §7.2)
+        g.call(Sys.MADVISE, prev[0], prev[1], MADV_DONTNEED, blocking=False)
+        g.drain()
+        print(f"  after madvise(DONTNEED): RSS = "
+              f"{g.pool.rss_bytes // MB} MB")
+    prev = (addr, nbytes)
+g.shutdown()

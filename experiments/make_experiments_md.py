@@ -1,0 +1,101 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from
+experiments/dryrun.json + experiments/hillclimb.json.
+
+  PYTHONPATH=src:. python experiments/make_experiments_md.py > EXPERIMENTS.md
+"""
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = json.loads((ROOT / "experiments" / "dryrun.json").read_text())
+HILL_PATH = ROOT / "experiments" / "hillclimb.json"
+HILL = json.loads(HILL_PATH.read_text()) if HILL_PATH.exists() else {}
+
+
+def fmt_cell(v):
+    rl, m = v["roofline"], v["memory"]
+    return (f"{rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+            f"{rl['collective_s']:.3f} | **{rl['bottleneck'][:4]}** | "
+            f"{rl['useful_flops_ratio']:.3f} | "
+            f"{m['peak_bytes_dev'] / 2**30:.1f}")
+
+
+def dryrun_table(mesh_sel: str) -> str:
+    rows = []
+    for k in sorted(DRY):
+        arch, shape, mesh_ = k.split("|")[:3]
+        if mesh_ != mesh_sel:
+            continue
+        v = DRY[k]
+        if v.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR: {v.get('error','')} |")
+            continue
+        rows.append(f"| {arch} | {shape} | {fmt_cell(v)} |")
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | useful | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def collective_schedule_table() -> str:
+    rows = []
+    for k in sorted(DRY):
+        arch, shape, mesh_ = k.split("|")[:3]
+        if mesh_ != "single":
+            continue
+        v = DRY[k]
+        if v.get("status") != "ok":
+            continue
+        by = v["collectives"]["by_op"]
+        parts = [f"{op}x{int(d['count'])} ({d['wire']/2**30:.1f}GiB)"
+                 for op, d in sorted(by.items())]
+        rows.append(f"| {arch} | {shape} | {'; '.join(parts) or '-'} |")
+    return ("| arch | shape | collective schedule (op x count, wire/dev) |\n"
+            "|---|---|---|\n" + "\n".join(rows))
+
+
+def perf_table() -> str:
+    rows = []
+    for name in sorted(HILL):
+        v = HILL[name]
+        rl = v["roofline"]
+        rows.append(
+            f"| {name} | {rl['compute_s']:.2f} | {rl['memory_s']:.2f} | "
+            f"{rl['collective_s']:.2f} | {rl['bottleneck']} | "
+            f"{v['memory']['peak_bytes_dev'] / 2**30:.1f} | "
+            f"{v['hypothesis'][:110]} |")
+    return ("| variant | compute_s | memory_s | collective_s | bottleneck "
+            "| peak GiB | hypothesis |\n|---|---|---|---|---|---|---|\n"
+            + "\n".join(rows))
+
+
+def memory_table() -> str:
+    rows = []
+    for k in sorted(DRY):
+        arch, shape, mesh_ = k.split("|")[:3]
+        v = DRY[k]
+        if v.get("status") != "ok":
+            continue
+        m = v["memory"]
+        rows.append(
+            f"| {arch} | {shape} | {v['mesh']} | {v.get('microbatches','-')} "
+            f"| {m['argument_bytes_dev']/2**30:.2f} "
+            f"| {m['temp_bytes_dev']/2**30:.2f} "
+            f"| {m['peak_bytes_dev']/2**30:.2f} "
+            f"| {v['cost']['flops_dev']:.2e} |")
+    return ("| arch | shape | mesh | microbatches | args GiB/dev | "
+            "temp GiB/dev | peak GiB/dev | flops/dev |\n"
+            "|---|---|---|---|---|---|---|---|\n" + "\n".join(rows))
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("single", "multi"):
+        print(dryrun_table(which))
+    elif which == "collectives":
+        print(collective_schedule_table())
+    elif which == "perf":
+        print(perf_table())
+    elif which == "memory":
+        print(memory_table())

@@ -1,0 +1,2 @@
+"""Core: the paper's contribution (GENESYS device-initiated syscalls)."""
+from repro.core import genesys  # noqa: F401

@@ -1,0 +1,26 @@
+"""GENESYS: generic device-initiated system calls (Vesely et al., 2017),
+adapted from GPU/Linux to TPU/JAX.
+
+The public façade is :class:`repro.core.genesys.invoke.Genesys`; semantics
+knobs mirror the paper: invocation granularity (WORK_ITEM / WORK_GROUP /
+KERNEL), ordering (STRONG / RELAXED_PRODUCER / RELAXED_CONSUMER), blocking
+vs non-blocking, and host-side coalescing (window + max batch).
+"""
+from repro.core.genesys.area import (
+    SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,
+)
+from repro.core.genesys.executor import Executor, ExecutorStats
+from repro.core.genesys.heap import HostHeap
+from repro.core.genesys.memory_pool import MemoryPool
+from repro.core.genesys.syscalls import Sys, SyscallTable, make_default_table
+from repro.core.genesys.invoke import (
+    Genesys, Granularity, Ordering, GenesysConfig,
+)
+from repro.core.genesys import table
+
+__all__ = [
+    "SyscallArea", "SlotState", "SLOT_DTYPE", "SLOT_BYTES",
+    "Executor", "ExecutorStats", "HostHeap", "MemoryPool",
+    "Sys", "SyscallTable", "make_default_table",
+    "Genesys", "Granularity", "Ordering", "GenesysConfig", "table",
+]

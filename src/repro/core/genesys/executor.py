@@ -1,0 +1,142 @@
+"""CPU-side syscall processing: interrupts, worker threads, coalescing.
+
+Mirrors the paper §5 'CPU-side system call processing':
+
+  * the device "interrupts" the CPU, identifying the requesting slot
+    (paper: hardware ID of the wavefront) — here a doorbell queue;
+  * the interrupt handler creates a kernel task on a work-queue — here a
+    bundle pushed to a worker thread pool;
+  * coalescing: the dispatcher waits up to ``coalesce_window_us`` for more
+    interrupts and merges up to ``coalesce_max`` requests into one bundle,
+    which a single worker then processes *serially* (the paper's explicit
+    latency/throughput trade-off);
+  * the two knobs are the paper's sysfs parameters.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.genesys.area import SyscallArea, SlotState
+from repro.core.genesys.syscalls import SyscallTable
+
+
+@dataclass
+class ExecutorStats:
+    interrupts: int = 0
+    bundles: int = 0
+    processed: int = 0
+    coalesce_hist: dict = field(default_factory=dict)
+    busy_s: float = 0.0
+
+    def mean_coalesce(self) -> float:
+        n = sum(self.coalesce_hist.values())
+        if not n:
+            return 0.0
+        return sum(k * v for k, v in self.coalesce_hist.items()) / n
+
+
+class Executor:
+    def __init__(self, area: SyscallArea, table: SyscallTable, *,
+                 n_workers: int = 2, coalesce_window_us: int = 0,
+                 coalesce_max: int = 1):
+        self.area = area
+        self.table = table
+        self.coalesce_window_us = int(coalesce_window_us)
+        self.coalesce_max = max(1, int(coalesce_max))
+        self.stats = ExecutorStats()
+        self._doorbell: queue.Queue = queue.Queue()
+        self._bundles: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._idle = threading.Condition(self._inflight_lock)
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="genesys-dispatch", daemon=True)
+        self._workers = [
+            threading.Thread(target=self._worker_loop,
+                             name=f"genesys-worker-{i}", daemon=True)
+            for i in range(max(1, n_workers))
+        ]
+        self._dispatcher.start()
+        for w in self._workers:
+            w.start()
+
+    # -- device side: the interrupt -------------------------------------------
+    def interrupt(self, slot: int) -> None:
+        """Device -> CPU doorbell (paper: s_sendmsg scalar instruction)."""
+        with self._inflight_lock:
+            self._inflight += 1
+            self.stats.interrupts += 1
+        self._doorbell.put(slot)
+
+    # -- dispatcher: interrupt handler + coalescing -----------------------------
+    def _dispatch_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                first = self._doorbell.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            bundle = [first]
+            if self.coalesce_max > 1 and self.coalesce_window_us > 0:
+                deadline = time.monotonic() + self.coalesce_window_us / 1e6
+                while len(bundle) < self.coalesce_max:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    try:
+                        bundle.append(self._doorbell.get(timeout=remaining))
+                    except queue.Empty:
+                        break
+            self.stats.bundles += 1
+            k = len(bundle)
+            self.stats.coalesce_hist[k] = self.stats.coalesce_hist.get(k, 0) + 1
+            self._bundles.put(bundle)
+
+    # -- worker: Linux workqueue task -------------------------------------------
+    def _worker_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                bundle = self._bundles.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            t0 = time.monotonic()
+            for slot in bundle:            # serial within bundle (paper §4.2)
+                self._process(slot)
+            self.stats.busy_s += time.monotonic() - t0
+
+    def _process(self, slot: int) -> None:
+        try:
+            if not self.area.claim_for_processing(slot):
+                return  # raced / cancelled
+            rec = self.area.slots[slot]
+            ret = self.table.dispatch(int(rec["sysno"]), rec["args"])
+            self.area.complete(slot, ret)
+            self.stats.processed += 1
+        finally:
+            with self._inflight_lock:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._idle.notify_all()
+
+    # -- §8.3: the completion barrier --------------------------------------------
+    def drain(self, timeout: float | None = 30.0) -> None:
+        """Block until every issued syscall has completed (the paper's new
+        CPU-invoked call that 'ensures all GPU system calls have completed')."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._inflight_lock:
+            while self._inflight > 0:
+                rem = None if deadline is None else deadline - time.monotonic()
+                if rem is not None and rem <= 0:
+                    raise TimeoutError(
+                        f"drain: {self._inflight} syscalls still in flight")
+                self._idle.wait(timeout=rem)
+
+    def shutdown(self) -> None:
+        self.drain()
+        self._stop.set()
+        self._dispatcher.join(timeout=2)
+        for w in self._workers:
+            w.join(timeout=2)

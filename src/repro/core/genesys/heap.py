@@ -1,0 +1,46 @@
+"""Host heap: the stand-in for the paper's shared virtual address space.
+
+GENESYS passes syscall arguments as raw pointers into CPU/GPU-shared memory.
+JAX device buffers have no stable host VA we may alias, so buffer arguments
+are passed as *handles* into this registry instead: a handle is a u64 that
+fits a syscall arg slot and resolves, on the host side, to a numpy buffer or
+bytes object. This preserves the paper's calling convention (6 u64 args)
+without pretending CPython has shared-VA semantics.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+
+class HostHeap:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._next = 1  # 0 is NULL
+        self._objs: dict[int, Any] = {}
+
+    def register(self, obj: Any) -> int:
+        with self._lock:
+            h = self._next
+            self._next += 1
+            self._objs[h] = obj
+            return h
+
+    def resolve(self, handle: int) -> Any:
+        with self._lock:
+            return self._objs[int(handle)]
+
+    def release(self, handle: int) -> None:
+        with self._lock:
+            self._objs.pop(int(handle), None)
+
+    def register_bytes(self, data: bytes) -> int:
+        return self.register(bytearray(data))
+
+    def new_buffer(self, nbytes: int) -> int:
+        import numpy as np
+        return self.register(np.zeros(int(nbytes), dtype=np.uint8))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._objs)

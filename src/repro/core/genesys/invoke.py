@@ -1,0 +1,251 @@
+"""The GENESYS invocation façade: granularity x ordering x blocking.
+
+Paper §4.1's design space, mapped to JAX dataflow:
+
+  granularity   WORK_ITEM   one slot per element of a batched request
+                WORK_GROUP  one slot per device shard (call inside shard_map)
+                KERNEL      one slot per jitted step
+
+  ordering      STRONG            pre- AND post-dependency (barriers both sides)
+                RELAXED_PRODUCER  pre-dependency only (write/send-like calls)
+                RELAXED_CONSUMER  post-dependency only (read/recv-like calls)
+
+  blocking      True   retval materialized into the graph
+                False  fire-and-forget; Genesys.drain() is the §8.3 barrier
+
+Constraints enforced at trace time (paper §4.1):
+  * WORK_ITEM supports only (implicit) STRONG ordering;
+  * KERNEL granularity forbids STRONG ordering — on the GPU it deadlocks the
+    hardware (not all work-items fit on the machine); the analogous JAX-SPMD
+    failure is a step-grain barrier over microbatches that cannot coexist.
+
+Because jax without x64 truncates int64, syscall args travel as (lo, hi)
+int32 pairs: JAX-side shape [6, 2] (or [n, 6, 2] for WORK_ITEM batches).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from enum import Enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core.genesys.area import SyscallArea, Ticket
+from repro.core.genesys.executor import Executor
+from repro.core.genesys.heap import HostHeap
+from repro.core.genesys.memory_pool import MemoryPool
+from repro.core.genesys.syscalls import SyscallTable, make_default_table
+
+
+class Granularity(Enum):
+    WORK_ITEM = "work_item"
+    WORK_GROUP = "work_group"
+    KERNEL = "kernel"
+
+
+class Ordering(Enum):
+    STRONG = "strong"
+    RELAXED_PRODUCER = "relaxed_producer"
+    RELAXED_CONSUMER = "relaxed_consumer"
+
+
+@dataclass(frozen=True)
+class GenesysConfig:
+    n_slots: int = 4096
+    n_workers: int = 2
+    coalesce_window_us: int = 0   # paper sysfs knob 1
+    coalesce_max: int = 1         # paper sysfs knob 2
+
+
+# ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
+
+def _split64(v: int) -> tuple[int, int]:
+    v = int(v) & 0xFFFFFFFFFFFFFFFF
+    lo = v & 0xFFFFFFFF
+    hi = (v >> 32) & 0xFFFFFFFF
+    # store as signed int32 bit patterns
+    return (lo - (1 << 32) if lo >= (1 << 31) else lo,
+            hi - (1 << 32) if hi >= (1 << 31) else hi)
+
+
+def _join64(lo, hi) -> int:
+    return ((int(hi) & 0xFFFFFFFF) << 32) | (int(lo) & 0xFFFFFFFF)
+
+
+def pack_args(*vals) -> jnp.ndarray:
+    """Pack up to 6 syscall args into a [6, 2] int32 array (traceable)."""
+    assert len(vals) <= 6
+    rows = []
+    for v in vals:
+        if isinstance(v, (int, np.integer)):
+            rows.append(jnp.array(_split64(int(v)), dtype=jnp.int32))
+        else:  # traced int32 scalar: fits in lo word
+            v = jnp.asarray(v)
+            rows.append(jnp.stack([v.astype(jnp.int32),
+                                   jnp.zeros((), jnp.int32)]))
+    while len(rows) < 6:
+        rows.append(jnp.zeros(2, dtype=jnp.int32))
+    return jnp.stack(rows)  # [6, 2]
+
+
+def _np_join(args_np: np.ndarray) -> list[int]:
+    """[6,2] int32 -> six python ints."""
+    return [_join64(args_np[i, 0], args_np[i, 1]) for i in range(6)]
+
+
+# ---------- data-dependency "barriers" ----------------------------------------
+
+def _fold(tree) -> jnp.ndarray:
+    """Reduce an arbitrary pytree to a zero-valued f32 scalar that still
+    carries a dataflow dependency on every leaf (the pre/post barrier)."""
+    leaves = [l for l in jax.tree_util.tree_leaves(tree)
+              if isinstance(l, (jax.Array, jnp.ndarray)) or hasattr(l, "dtype")]
+    z = jnp.zeros((), jnp.float32)
+    for l in leaves:
+        lf = jnp.asarray(l)
+        # min+max*0 keeps the dep without a full reduction of large tensors
+        z = z + (lf.reshape(-1)[0].astype(jnp.float32) * 0.0)
+    return z
+
+
+def _tie(tree, tag: jnp.ndarray):
+    """Return `tree` with every leaf made data-dependent on `tag` (==0)."""
+    def one(l):
+        lf = jnp.asarray(l)
+        return lf + tag.astype(lf.dtype)
+    return jax.tree_util.tree_map(one, tree)
+
+
+@dataclass
+class InvokeResult:
+    """Outcome of a GENESYS invocation inside a jitted computation."""
+    retval: jnp.ndarray | None   # int32 [2] (lo,hi) or [n,2]; None if non-blocking
+    _tag: jnp.ndarray | None
+
+    def ret64(self) -> jnp.ndarray | None:
+        """Return value as (lo) int32 — sufficient for sizes/fds/errnos."""
+        if self.retval is None:
+            return None
+        return self.retval[..., 0]
+
+    def tie(self, tree):
+        """Make `tree` depend on syscall completion (the post-barrier).
+        Identity for relaxed-producer / non-blocking invocations."""
+        if self._tag is None:
+            return tree
+        return _tie(tree, self._tag)
+
+
+class Genesys:
+    """Owner of the syscall area, executor, heap and memory pool."""
+
+    def __init__(self, config: GenesysConfig = GenesysConfig()):
+        self.config = config
+        self.heap = HostHeap()
+        self.pool = MemoryPool()
+        self.table: SyscallTable = make_default_table(self.heap, self.pool)
+        self.area = SyscallArea(config.n_slots)
+        self.executor = Executor(
+            self.area, self.table,
+            n_workers=config.n_workers,
+            coalesce_window_us=config.coalesce_window_us,
+            coalesce_max=config.coalesce_max,
+        )
+        self._lock = threading.Lock()
+
+    # ------------- host-side path (used by substrates & the executor itself) --
+    def call(self, sysno: int, *args, blocking: bool = True,
+             hw_id: int = 0) -> int | Ticket:
+        t = self.area.acquire(hw_id)
+        self.area.post(t, int(sysno), [int(a) for a in args], blocking)
+        self.executor.interrupt(t.slot)
+        if blocking:
+            return self.area.wait(t)
+        return t
+
+    def call_async(self, sysno: int, *args, hw_id: int = 0) -> Ticket:
+        """Post a *blocking-slot* syscall but defer the wait: the paper's
+        'weak ordering + blocking' combination — some waiter eventually
+        polls the FINISHED slot (e.g. the data-prefetch pipeline)."""
+        t = self.area.acquire(hw_id)
+        self.area.post(t, int(sysno), [int(a) for a in args], True)
+        self.executor.interrupt(t.slot)
+        return t
+
+    def wait(self, ticket: Ticket, timeout: float | None = None) -> int:
+        return self.area.wait(ticket, timeout=timeout)
+
+    def drain(self) -> None:
+        self.executor.drain()
+
+    def shutdown(self) -> None:
+        self.executor.shutdown()
+
+    # ------------- device-side path (inside jit) --------------------------------
+    def _host_entry(self, blocking: bool, sysno_np, args_np, hw_np):
+        """io_callback target: post slot(s), ring doorbell, maybe wait."""
+        sysno = int(np.asarray(sysno_np).reshape(()))
+        hw = int(np.asarray(hw_np).reshape(()))
+        a = np.asarray(args_np)
+        batched = a.ndim == 3
+        rows = a if batched else a[None]
+        tickets = []
+        for r in rows:
+            t = self.area.acquire(hw)
+            self.area.post(t, sysno, _np_join(r), blocking)
+            self.executor.interrupt(t.slot)
+            tickets.append(t)
+        if not blocking:
+            return np.zeros((len(rows), 2) if batched else (2,), np.int32)
+        rets = np.array([_split64(self.area.wait(t)) for t in tickets],
+                        dtype=np.int32)
+        return rets if batched else rets[0]
+
+    def invoke(self, sysno, args: jnp.ndarray, *,
+               granularity: Granularity = Granularity.WORK_GROUP,
+               ordering: Ordering = Ordering.STRONG,
+               blocking: bool = True,
+               deps=None, hw_id=0) -> InvokeResult:
+        """Invoke a system call from inside a jitted computation.
+
+        ``args``: [6,2] int32 from :func:`pack_args` (or [n,6,2] for
+        WORK_ITEM batches — one slot per row).
+        """
+        if granularity == Granularity.WORK_ITEM and ordering != Ordering.STRONG:
+            raise ValueError(
+                "work-item granularity supports only implicit strong ordering "
+                "(paper §4.1)")
+        if granularity == Granularity.KERNEL and ordering == Ordering.STRONG:
+            raise ValueError(
+                "strong ordering at kernel granularity can deadlock the "
+                "machine (paper §4.1) — use a relaxed ordering")
+        args = jnp.asarray(args, jnp.int32)
+        batched = args.ndim == 3
+        if batched and granularity != Granularity.WORK_ITEM:
+            raise ValueError("batched args require WORK_ITEM granularity")
+
+        # pre-barrier: producers (and strong) must wait for prior work
+        if deps is not None and ordering in (Ordering.STRONG,
+                                             Ordering.RELAXED_PRODUCER):
+            args = args + _fold(deps).astype(jnp.int32)
+
+        n = args.shape[0] if batched else None
+        out_shape = jax.ShapeDtypeStruct((n, 2) if batched else (2,), jnp.int32)
+        ordered = (granularity == Granularity.WORK_ITEM)  # CPU-thread-like
+        ret = io_callback(
+            partial(self._host_entry, blocking),
+            out_shape,
+            jnp.asarray(int(sysno), jnp.int32),
+            args,
+            jnp.asarray(hw_id, jnp.int32),
+            ordered=ordered,
+        )
+        # post-barrier: consumers (and strong) gate downstream work on retval
+        if blocking and ordering in (Ordering.STRONG, Ordering.RELAXED_CONSUMER):
+            tag = jnp.sum(ret).astype(jnp.float32) * 0.0
+            return InvokeResult(retval=ret, _tag=tag)
+        return InvokeResult(retval=ret if blocking else None, _tag=None)

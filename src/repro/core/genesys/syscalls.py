@@ -1,0 +1,181 @@
+"""Syscall numbers and host-side handlers.
+
+GENESYS implements 11 Linux syscalls spanning filesystem, network, and
+memory (paper §5): read, write, pread, pwrite, open, close, sendto,
+recvfrom, mmap, munmap, madvise. We implement the same set (real files and
+real UDP sockets; memory against :class:`MemoryPool`), plus getrusage-style
+introspection (paper §1: 'getrusage can be adapted to return information
+about GPU resource usage').
+
+Buffer/string arguments are heap handles (see heap.py). Numbers follow
+x86_64 where one exists.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+from enum import IntEnum
+from typing import Callable
+
+import numpy as np
+
+from repro.core.genesys.heap import HostHeap
+from repro.core.genesys.memory_pool import MemoryPool
+
+
+class Sys(IntEnum):
+    READ = 0
+    WRITE = 1
+    OPEN = 2
+    CLOSE = 3
+    MMAP = 9
+    MUNMAP = 11
+    MADVISE = 28
+    PREAD64 = 17
+    PWRITE64 = 18
+    SENDTO = 44
+    RECVFROM = 45
+    SOCKET = 41
+    BIND = 49
+    GETRUSAGE = 98
+    # GENESYS extensions (paper §8.1 class-2: adapted semantics)
+    CLOCK_GETTIME = 228
+
+
+Handler = Callable[..., int]
+
+
+class SyscallTable:
+    """number -> handler registry; the dispatch side of the paper's Fig 2."""
+
+    def __init__(self, heap: HostHeap, pool: MemoryPool):
+        self.heap = heap
+        self.pool = pool
+        self._handlers: dict[int, Handler] = {}
+        self._fd_lock = threading.Lock()
+        self._sockets: dict[int, socket.socket] = {}
+        self.stats: dict[str, int] = {}
+
+    def register(self, no: int, fn: Handler) -> None:
+        self._handlers[int(no)] = fn
+
+    def dispatch(self, sysno: int, args) -> int:
+        fn = self._handlers.get(int(sysno))
+        if fn is None:
+            return -38  # -ENOSYS
+        name = Sys(sysno).name if sysno in set(int(s) for s in Sys) else str(sysno)
+        self.stats[name] = self.stats.get(name, 0) + 1
+        try:
+            return int(fn(*[int(a) for a in args]))
+        except OSError as e:
+            return -int(e.errno or 5)
+
+    # ---- filesystem ----------------------------------------------------------
+    def _sys_open(self, path_h, flags, mode, *_):
+        path = bytes(self.heap.resolve(path_h)).decode()
+        return os.open(path, flags, mode or 0o644)
+
+    def _sys_close(self, fd, *_):
+        sock = self._sockets.pop(fd, None)
+        if sock is not None:
+            sock.close()
+            return 0
+        os.close(fd)
+        return 0
+
+    def _sys_read(self, fd, buf_h, count, *_):
+        buf = self.heap.resolve(buf_h)
+        data = os.read(fd, count)
+        n = len(data)
+        np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
+        return n
+
+    def _sys_write(self, fd, buf_h, count, *_):
+        buf = self.heap.resolve(buf_h)
+        return os.write(fd, bytes(np.asarray(buf)[:count].tobytes()))
+
+    def _sys_pread(self, fd, buf_h, count, offset, dst_off=0, *_):
+        buf = self.heap.resolve(buf_h)
+        data = os.pread(fd, count, offset)
+        n = len(data)
+        np.asarray(buf)[dst_off:dst_off + n] = np.frombuffer(data, dtype=np.uint8)
+        return n
+
+    def _sys_pwrite(self, fd, buf_h, count, offset, src_off=0, *_):
+        buf = self.heap.resolve(buf_h)
+        view = np.asarray(buf)[src_off:src_off + count].tobytes()
+        return os.pwrite(fd, view, offset)
+
+    # ---- network (UDP, as in the paper's echo server §7.3) -------------------
+    def _sys_socket(self, family, type_, proto, *_):
+        s = socket.socket(family or socket.AF_INET, type_ or socket.SOCK_DGRAM,
+                          proto)
+        fd = s.fileno()
+        with self._fd_lock:
+            self._sockets[fd] = s
+        return fd
+
+    def _sys_bind(self, fd, port, *_):
+        s = self._sockets[fd]
+        s.bind(("127.0.0.1", port))
+        return 0
+
+    def _sys_sendto(self, fd, buf_h, count, port, *_):
+        s = self._sockets[fd]
+        buf = self.heap.resolve(buf_h)
+        return s.sendto(np.asarray(buf)[:count].tobytes(), ("127.0.0.1", port))
+
+    def _sys_recvfrom(self, fd, buf_h, count, *_):
+        s = self._sockets[fd]
+        data, _addr = s.recvfrom(count)
+        buf = self.heap.resolve(buf_h)
+        n = len(data)
+        np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
+        return n
+
+    # ---- memory ----------------------------------------------------------------
+    def _sys_mmap(self, addr, length, *_):
+        return self.pool.mmap(length)
+
+    def _sys_munmap(self, addr, length, *_):
+        return self.pool.munmap(addr, length)
+
+    def _sys_madvise(self, addr, length, advice, *_):
+        return self.pool.madvise(addr, length, advice)
+
+    # ---- introspection ----------------------------------------------------------
+    def _sys_getrusage(self, who, out_h, *_):
+        # Adapted semantics: report GENESYS resource usage (paper §1).
+        total = sum(self.stats.values())
+        if out_h:
+            buf = np.asarray(self.heap.resolve(out_h))
+            buf[: 8] = np.frombuffer(np.int64(total).tobytes(), dtype=np.uint8)
+        return total
+
+    def _sys_clock_gettime(self, clk, *_):
+        import time
+        return int(time.monotonic_ns() // 1000)  # usec
+
+
+def make_default_table(heap: HostHeap | None = None,
+                       pool: MemoryPool | None = None) -> SyscallTable:
+    heap = heap if heap is not None else HostHeap()
+    pool = pool if pool is not None else MemoryPool()
+    t = SyscallTable(heap, pool)
+    t.register(Sys.OPEN, t._sys_open)
+    t.register(Sys.CLOSE, t._sys_close)
+    t.register(Sys.READ, t._sys_read)
+    t.register(Sys.WRITE, t._sys_write)
+    t.register(Sys.PREAD64, t._sys_pread)
+    t.register(Sys.PWRITE64, t._sys_pwrite)
+    t.register(Sys.SOCKET, t._sys_socket)
+    t.register(Sys.BIND, t._sys_bind)
+    t.register(Sys.SENDTO, t._sys_sendto)
+    t.register(Sys.RECVFROM, t._sys_recvfrom)
+    t.register(Sys.MMAP, t._sys_mmap)
+    t.register(Sys.MUNMAP, t._sys_munmap)
+    t.register(Sys.MADVISE, t._sys_madvise)
+    t.register(Sys.GETRUSAGE, t._sys_getrusage)
+    t.register(Sys.CLOCK_GETTIME, t._sys_clock_gettime)
+    return t

@@ -1,0 +1,80 @@
+"""Pallas flash-decode: one query token against a long KV cache.
+
+q [B, H, hd]; k,v [B, KV, S, hd]; lens [B] valid lengths. Grid (B, H, nk)
+with the KV-block dimension innermost (arbitrary semantics): online softmax
+accumulates in VMEM scratch, masked beyond lens[b]. KV blocks of 512 keep
+the per-step working set (2 * 512 * hd * 4B ~ 0.5MB at hd=128) well inside
+VMEM while amortizing HBM reads of the cache — the decode bottleneck.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m_i, l_i, *,
+            block_k: int, scale: float, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [hd]
+    k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid = len_ref[0]
+    s = (k @ q) * scale                               # [bk]
+    pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+    s = jnp.where(pos < valid, s, NEG_INF)
+    m_new = jnp.maximum(m_i[0], s.max())
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_i[0] - m_new)
+    l_i[0] = l_i[0] * corr + p.sum()
+    acc[...] = acc[...] * corr + p @ v                # [hd]
+    m_i[0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_i[0], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lens, *, scale: float | None = None,
+                     block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """q [B,H,hd]; k,v [B,KV,S,hd]; lens [B] -> o [B,H,hd]."""
+    B, H, hd = q.shape
+    _, KV, S, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    bk = min(block_k, S)
+    nk = S // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=bk, scale=scale, nk=nk),
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+must match in tests, swept over shapes/dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# re-exported chunked oracles (themselves validated against the pure
+# recurrences in tests)
+from repro.models.mamba2 import ssd_chunked as mamba2_ssd_ref  # noqa: F401
+from repro.models.mamba2 import ssd_decode_step  # noqa: F401
+from repro.models.rwkv6 import wkv6_chunked as rwkv6_wkv_ref  # noqa: F401
+from repro.models.rwkv6 import wkv6_step  # noqa: F401
+
+
+def attention_ref(q, k, v, *, causal: bool, scale: float | None = None):
+    """q [B,H,Sq,hd]; k,v [B,KV,Skv,hd] (GQA) -> o [B,H,Sq,hd] f32."""
+    B, H, Sq, hd = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k, v, lens, *, scale: float | None = None):
+    """q [B,H,hd]; k,v [B,KV,S,hd]; lens [B] -> o [B,H,hd] f32."""
+    B, H, hd = q.shape
+    _, KV, S, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    s = jnp.where(pos[None, None, :] < lens[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vv.astype(jnp.float32))
+
+
+def gmm_ref(x, w, group_sizes):
+    """x [T, D] sorted by expert; w [E, D, F]; group_sizes [E] -> [T, F]."""
+    T, D = x.shape
+    E = w.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    token_expert = jnp.searchsorted(
+        jnp.cumsum(group_sizes), jnp.arange(T), side="right")
+    token_expert = jnp.clip(token_expert, 0, E - 1)
+    wx = w[token_expert]                        # [T, D, F] gather
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      wx.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,56 @@
+"""Serving launcher: batched UDP decode server over GENESYS network
+syscalls (paper §7.3, generalized to a model server).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
+      --port 9111 --batches 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--reply-port", type=int, required=True)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core.genesys import Genesys, GenesysConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.registry import get_api
+    from repro.serving.server import GenesysUdpServer
+    from repro.sharding import rules_for
+    from repro.train.steps import make_serve_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    gsys = Genesys(GenesysConfig(n_workers=2))
+    mesh = make_host_mesh()
+    rules = rules_for(cfg, mesh)
+    api = get_api(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    cache = api.init_cache(cfg, 1, 256)
+    serve = jax.jit(make_serve_step(cfg, rules))
+    srv = GenesysUdpServer(gsys, port=args.port)
+    with mesh:
+        stats = srv.serve_model(serve, params, cache,
+                                n_batches=args.batches,
+                                reply_port=args.reply_port,
+                                max_tokens=args.max_tokens)
+    print(f"requests={stats.requests} batches={stats.batches} "
+          f"tokens={stats.tokens_out} wall={stats.wall_s:.2f}s")
+    srv.close()
+    gsys.shutdown()
+
+
+if __name__ == "__main__":
+    main()

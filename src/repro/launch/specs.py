@@ -1,0 +1,65 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input, per
+(arch x shape) cell — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, ShapeKind, Family
+from repro.models.registry import get_api
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Train/prefill batch dict of ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = {}
+    if cfg.family == Family.VLM:
+        P = cfg.n_patch_tokens
+        out["embeds"] = _sds((B, P, cfg.d_model), dt)
+        out["tokens"] = _sds((B, S - P), I32)
+        if shape.kind == ShapeKind.TRAIN:
+            out["labels"] = _sds((B, S - P), I32)
+        return out
+    if cfg.family == Family.ENCDEC:
+        out["embeds"] = _sds((B, S, cfg.d_model), dt)   # frame embeddings
+        out["tokens"] = _sds((B, S), I32)
+        if shape.kind == ShapeKind.TRAIN:
+            out["labels"] = _sds((B, S), I32)
+        return out
+    out["tokens"] = _sds((B, S), I32)
+    if shape.kind == ShapeKind.TRAIN:
+        out["labels"] = _sds((B, S), I32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 kv_rep: int = 1) -> dict:
+    """serve_step inputs: one new token + a seq_len KV/state cache."""
+    B, S = shape.global_batch, shape.seq_len
+    api = get_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, S, kv_rep=kv_rep))
+    out = {
+        "cache": cache,
+        "token": _sds((B, 1), I32),
+        "cache_len": _sds((B,), I32),
+    }
+    if cfg.family == Family.ENCDEC:
+        out["enc_out"] = _sds((B, min(S, 4096), cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                kv_rep: int = 1) -> dict:
+    if shape.kind == ShapeKind.DECODE:
+        return decode_specs(cfg, shape, kv_rep=kv_rep)
+    return batch_specs(cfg, shape)

@@ -1,0 +1,284 @@
+"""Shared model layers: RMSNorm, RoPE, GQA attention (blockwise-flash XLA
+reference + Pallas hook), SwiGLU MLP. All functions are pure; params come
+from ParamBuilder subtrees.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+# ----------------------------------------------------------------- norms ----
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------- rope -----
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------- blockwise flash (XLA) ----
+
+def flash_attention_xla(q, k, v, *, causal: bool, q_offset=0,
+                        q_chunk: int = 512, kv_chunk: int = 1024,
+                        scale: float | None = None):
+    """Memory-efficient attention in pure lax — the reference the Pallas
+    kernel must match. q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] (grouped).
+
+    Online-softmax over KV chunks, outer lax.map over Q chunks, so the
+    materialized working set is O(q_chunk * kv_chunk) per head.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    q = q.reshape(B, Sq, KV, G, hd)
+    nq = max(1, Sq // q_chunk) if Sq % (q_chunk) == 0 else 1
+    q_chunk = Sq // nq
+    nk = max(1, Skv // kv_chunk) if Skv % kv_chunk == 0 else 1
+    kv_chunk = Skv // nk
+
+    qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kpos = jnp.arange(Skv, dtype=jnp.int32)
+
+    def one_q_chunk(qi):
+        qs = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * q_chunk, q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            kp = jax.lax.dynamic_slice_in_dim(kpos, ki * kv_chunk, kv_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qs, ks,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = qp[:, None] >= kp[None, :]
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vs.dtype), vs,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)  # [B,KV,G,qc,hd]
+
+    if nq == 1:
+        out = one_q_chunk(jnp.asarray(0))
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    outs = jax.lax.map(one_q_chunk, jnp.arange(nq, dtype=jnp.int32))
+    # [nq,B,KV,G,qc,hd] -> [B,Sq,H,hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KV, G, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention_two_part(q, k_cache, v_cache, k_new, v_new, cache_len,
+                              *, scale=None):
+    """Decode without writing the cache first: softmax over
+    [old cache (masked < cache_len); new token]. q [B,1,H,hd];
+    caches [B,S,KV,hd]; k_new/v_new [B,1,KV,hd]."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qr = q.reshape(B, KV, G, hd)
+    s_old = jnp.einsum("bkgh,bskh->bkgs", qr, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)
+    mask = pos[None, :] < cache_len[:, None]
+    s_old = jnp.where(mask[:, None, None, :], s_old, -jnp.inf)
+    s_new = jnp.einsum("bkgh,bkh->bkg", qr, k_new[:, 0],
+                       preferred_element_type=jnp.float32) * scale
+    m = jnp.maximum(s_old.max(axis=-1), s_new)              # [B,KV,G]
+    p_old = jnp.exp(s_old - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    denom = p_old.sum(axis=-1) + p_new
+    o = jnp.einsum("bkgs,bskh->bkgh", p_old.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o + p_new[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32)
+    o = o / denom[..., None]
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_attention_xla(q, k_cache, v_cache, cache_len, *, scale=None):
+    """Single-token decode: q [B,1,H,hd]; caches [B,S,KV,hd]; cache_len [B]."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)
+    mask = pos[None, :] < cache_len[:, None]            # [B,S]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------ attention -----
+
+def init_attention(pb, cfg, *, rope_scaled: bool = True, prefix: str = "attn"):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    a = pb.sub(prefix)
+    a.param("wq", (D, H, hd), ("embed", "heads", "head_dim"))
+    a.param("wk", (D, KV, hd), ("embed", "kv_heads", "kv_head_dim"))
+    a.param("wv", (D, KV, hd), ("embed", "kv_heads", "kv_head_dim"))
+    a.param("wo", (H, hd, D), ("heads", "head_dim", "embed"))
+    if cfg.qkv_bias:
+        a.param("bq", (H, hd), ("heads", "head_dim"), init="zeros")
+        a.param("bk", (KV, hd), ("kv_heads", "kv_head_dim"), init="zeros")
+        a.param("bv", (KV, hd), ("kv_heads", "kv_head_dim"), init="zeros")
+
+
+def attention(p, cfg, rules, x, *, positions, causal=True, kv_x=None,
+              cache=None, cache_len=None, use_rope=True,
+              carried_cache=None):
+    """GQA attention. cache: dict(k,v) [B,S,KV,hd] for decode; kv_x for
+    cross-attention (enc-dec); carried_cache: (kc, vc, layer_idx) stacked
+    [L,B,S,KV,hd] buffers updated in place. Returns (out, new_cache)."""
+    dt = x.dtype
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rules.kv_rep > 1:
+        # Megatron-style KV replication to the TP degree: consecutive blocks
+        # stay aligned with the (KV_eff, G_eff) grouping used by flash attn.
+        k = jnp.repeat(k, rules.kv_rep, axis=2)
+        v = jnp.repeat(v, rules.kv_rep, axis=2)
+    q = constrain(q, rules, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, rules, "batch", "seq", "kv_heads", "kv_head_dim")
+    v = constrain(v, rules, "batch", "seq", "kv_heads", "kv_head_dim")
+
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        if cache is None:
+            k = rope(k, positions, cfg.rope_theta)
+        else:
+            k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if carried_cache is not None and kv_x is None:
+        # decode against a CARRIED stacked cache [L,B,S,KV,hd] (§Perf
+        # "in-place carried KV cache"): READ the old layer slice, attend
+        # the new token separately (two-part softmax), then WRITE only the
+        # new token. The write operand is data-tied to the read so XLA
+        # orders read-before-write and can alias the buffer in place.
+        kc, vc, li = carried_cache
+        zero = jnp.zeros((), jnp.int32)
+        pos = cache_len[0]
+        quant = kc.dtype == jnp.int8
+        QSCALE = 16.0   # static symmetric scale; production carries
+        #               # per-block scales (+<1% bytes) — see DESIGN.md
+        k_l = jax.lax.dynamic_slice(
+            kc, (li, zero, zero, zero, zero), (1,) + kc.shape[1:])[0]
+        v_l = jax.lax.dynamic_slice(
+            vc, (li, zero, zero, zero, zero), (1,) + vc.shape[1:])[0]
+        if quant:
+            k_l = k_l.astype(dt) / QSCALE
+            v_l = v_l.astype(dt) / QSCALE
+        out = decode_attention_two_part(q, k_l, v_l, k, v, cache_len)
+        # order the cache write after ALL reads (out depends on k_l and
+        # v_l in full) so copy-insertion can alias the buffer in place
+        tie = out[0, 0, 0, 0] * 0
+        if quant:
+            k_w = jnp.clip(jnp.round(k * QSCALE + tie), -127, 127
+                           ).astype(jnp.int8)
+            v_w = jnp.clip(jnp.round(v * QSCALE + tie), -127, 127
+                           ).astype(jnp.int8)
+        else:
+            k_w = (k + tie).astype(kc.dtype)
+            v_w = (v + tie).astype(vc.dtype)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k_w[None], (li, zero, pos, zero, zero))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v_w[None], (li, zero, pos, zero, zero))
+        new_cache = (kc, vc)
+    elif cache is not None and kv_x is None:
+        # decode: append to cache at cache_len (per-layer slice variant)
+        B = x.shape[0]
+        idx = cache_len  # [B] int32, same for all batch in our serving loop
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx[0], axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx[0], axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention_xla(q, k_cache, v_cache, cache_len + 1)
+    elif cache is not None:  # cross-attention with precomputed cache
+        out = flash_attention_xla(q, cache["k"], cache["v"], causal=False)
+        new_cache = cache
+    else:
+        out = flash_attention_xla(q, k, v, causal=causal)
+    out = constrain(out, rules, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return constrain(y, rules, "batch", "seq", "embed"), new_cache
+
+
+# ------------------------------------------------------------------ mlp -----
+
+def init_mlp(pb, cfg, d_ff=None, prefix: str = "mlp"):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    m = pb.sub(prefix)
+    if cfg.mlp_kind == "swiglu":
+        m.param("wi_gate", (D, F), ("embed", "mlp"))
+    m.param("wi_up", (D, F), ("embed", "mlp"))
+    m.param("wo", (F, D), ("mlp", "embed"))
+
+
+def mlp(p, rules, x):
+    dt = x.dtype
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+    if "wi_gate" in p:   # swiglu
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:                # gelu 2-matrix (starcoder2 / seamless)
+        h = jax.nn.gelu(u)
+    h = constrain(h, rules, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return constrain(y, rules, "batch", "seq", "embed")

@@ -1,0 +1,314 @@
+"""Mamba2 (SSD) blocks and the zamba2 hybrid (mamba2 stack + one shared
+GQA attention block applied every `shared_attn_period` layers).
+
+Training uses the chunked SSD algorithm (intra-chunk attention-like einsums
++ inter-chunk state recurrence via lax.scan); decoding is the O(1)-state
+recurrent step. The Pallas mamba2_scan kernel implements the same chunked
+algorithm for TPU; this module is also its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.module import ParamBuilder, stack_layers
+from repro.models import layers as L
+from repro.sharding import constrain
+
+CHUNK = 64
+
+
+# --------------------------------------------------------------- SSD core ---
+
+def ssd_chunked(x, dt, A, Bm, Cm, s0=None, chunk: int = CHUNK):
+    """Chunked state-space-dual scan.
+
+    x  [b,l,h,p]   per-head inputs
+    dt [b,l,h]     positive step sizes (post-softplus)
+    A  [h]         negative decay rates
+    Bm [b,l,n], Cm [b,l,n]   input/output projections (ngroups=1)
+    s0 [b,h,n,p]   initial state (decode/carry); zeros if None
+    Returns (y [b,l,h,p], s_final [b,h,n,p]).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    c = min(chunk, l)
+    nc = l // c
+    assert nc * c == l, (l, c)
+
+    xc = x.reshape(b, nc, c, h, p)
+    dtc = dt.reshape(b, nc, c, h)
+    Bc = Bm.reshape(b, nc, c, n)
+    Cc = Cm.reshape(b, nc, c, n)
+
+    dA = dtc * A  # [b,nc,c,h], negative
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk: decay matrix L_ij = exp(sum_{j<k<=i} dA_k), lower-tri
+    ss = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Lm = jnp.where(tri[None, None, :, :, None], jnp.exp(ss), 0.0)
+    scores = jnp.einsum("bzin,bzjn->bzij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bzij,bzijh,bzjhp->bzihp",
+                        scores, Lm.astype(jnp.float32),
+                        xdt.astype(jnp.float32))
+
+    # chunk-final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # [b,nc,c,h]
+    states = jnp.einsum("bzcn,bzch,bzchp->bzhnp",
+                        Bc, (decay_states * dtc).astype(jnp.float32),
+                        xc.astype(jnp.float32))
+
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # [b,nc,h]
+
+    def step(s, z):
+        st, dec = z
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+    s_init = (jnp.zeros((b, h, n, p), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+    s_fin, s_prevs = jax.lax.scan(
+        step, s_init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                            # [b,nc,h,n,p]
+
+    y_off = jnp.einsum("bzcn,bzch,bzhnp->bzchp",
+                       Cc, jnp.exp(dA_cs), s_prevs)
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, s_fin.astype(jnp.float32)
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, state):
+    """One-token recurrence. x [b,h,p], dt [b,h], Bm/Cm [b,n],
+    state [b,h,n,p] -> (y [b,h,p], state')."""
+    dA = jnp.exp(dt * A)                                        # [b,h]
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, x.astype(jnp.float32))
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state)
+    return y.astype(x.dtype), state
+
+
+# ------------------------------------------------------------ mamba block ---
+
+def init_mamba_block(pb: ParamBuilder, cfg: ModelConfig):
+    D, Din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    m = pb.sub("mamba")
+    m.param("in_proj", (D, 2 * Din + 2 * N + nh), ("embed", "ssm_inner"))
+    m.param("conv_w", (cfg.ssm_conv, Din + 2 * N), (None, "ssm_inner"),
+            scale=0.5)
+    m.param("A_log", (nh,), (None,), init="zeros")
+    m.param("D", (nh,), (None,), init="ones")
+    m.param("dt_bias", (nh,), (None,), init="zeros")
+    m.param("norm", (Din,), ("ssm_inner",), init="ones")
+    m.param("out_proj", (Din, D), ("ssm_inner", "embed"))
+    pb.param("ln", (D,), ("embed",), init="ones")
+
+
+def mamba_block(p, cfg: ModelConfig, rules, x, *, ssm_state=None,
+                conv_state=None, decode: bool = False):
+    """x [B,L,D] (L=1 in decode). Returns (y, (ssm_state', conv_state'))."""
+    dt_ = x.dtype
+    D, Din, N, nh, hp = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.ssm_heads, cfg.ssm_head_dim)
+    m = p["mamba"]
+    h = L.rmsnorm(x, p["ln"])
+    proj = jnp.einsum("bld,de->ble", h, m["in_proj"].astype(dt_))
+    proj = constrain(proj, rules, "batch", "seq", "ssm_inner")
+    z, xbc, dt = jnp.split(proj, [Din, 2 * Din + 2 * N], axis=-1)
+
+    # depthwise causal conv over (x, B, C)
+    k = cfg.ssm_conv
+    w = m["conv_w"].astype(dt_)                                   # [k, Din+2N]
+    if decode:
+        hist = jnp.concatenate([conv_state, xbc], axis=1)          # [B,k,&]
+        conv = (hist * w[None]).sum(axis=1, keepdims=True)
+        new_conv_state = hist[:, 1:]
+    else:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), dt_)
+        hist = jnp.concatenate([pad, xbc], axis=1)
+        conv = sum(hist[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+        new_conv_state = hist[:, -(k - 1):]
+    conv = jax.nn.silu(conv)
+
+    xs, Bm, Cm = jnp.split(conv, [Din, Din + N], axis=-1)
+    xs = xs.reshape(*xs.shape[:-1], nh, hp)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         m["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(m["A_log"].astype(jnp.float32))
+
+    if decode:
+        y, new_state = ssd_decode_step(
+            xs[:, 0], dt[:, 0], A, Bm[:, 0].astype(jnp.float32),
+            Cm[:, 0].astype(jnp.float32), ssm_state)
+        y = y[:, None]
+    else:
+        y, new_state = ssd_chunked(xs, dt, A, Bm.astype(jnp.float32),
+                                   Cm.astype(jnp.float32), s0=ssm_state)
+    y = y + xs * m["D"].astype(dt_)[:, None]
+    y = y.reshape(*y.shape[:-2], Din)
+    # gated rmsnorm then out projection
+    y = L.rmsnorm(y * jax.nn.silu(z), m["norm"])
+    out = jnp.einsum("ble,ed->bld", y, m["out_proj"].astype(dt_))
+    return x + constrain(out, rules, "batch", "seq", "embed"), \
+        (new_state, new_conv_state)
+
+
+# ---------------------------------------------------------- zamba2 hybrid ---
+
+def init(rng, cfg: ModelConfig):
+    """zamba2: n_layers mamba blocks; one *shared* attention+MLP block applied
+    after every `shared_attn_period` mamba layers (weights reused)."""
+    pb = ParamBuilder(rng, jnp.dtype(cfg.params_dtype))
+    pb.param("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+             scale=1.0)
+    def one(lpb, i):
+        init_mamba_block(lpb, cfg)
+    blocks, axes = stack_layers(rng, jnp.dtype(cfg.params_dtype),
+                                cfg.n_layers, one)
+    pb.params["blocks"] = blocks
+    pb.axes["blocks"] = axes
+    if cfg.shared_attn_period:
+        sh = pb.sub("shared")
+        L.init_attention(sh, cfg)
+        L.init_mlp(sh, cfg)
+        sh.param("ln_attn", (cfg.d_model,), ("embed",), init="ones")
+        sh.param("ln_mlp", (cfg.d_model,), ("embed",), init="ones")
+    pb.param("final_norm", (cfg.d_model,), ("embed",), init="ones")
+    pb.param("lm_head", (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    return pb.params, pb.axes
+
+
+def _shared_attn(params, cfg, rules, x, *, positions, cache, cache_len,
+                 carried_cache=None):
+    sp = params["shared"]
+    h, nc = L.attention(sp["attn"], cfg, rules, L.rmsnorm(x, sp["ln_attn"]),
+                        positions=positions, cache=cache, cache_len=cache_len,
+                        carried_cache=carried_cache)
+    x = x + h
+    x = x + L.mlp(sp["mlp"], rules, L.rmsnorm(x, sp["ln_mlp"]))
+    return x, nc
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_period if cfg.shared_attn_period \
+        else 0
+
+
+def forward(params, cfg: ModelConfig, rules, tokens, *, positions=None,
+            cache=None, cache_len=None, embeds=None):
+    """cache (decode): dict(kv={k,v:[R,B,S,KV,hd]}, ssm=[L,B,h,n,p],
+    conv=[L,B,k-1,Din+2N]) where R = shared-attn applications."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[tokens]
+    B, S, _ = x.shape
+    if positions is None:
+        base = cache_len[:, None] if cache_len is not None else 0
+        positions = base + jnp.arange(S, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(positions, (B, S))
+    x = constrain(x, rules, "batch", "seq", "embed")
+
+    decode = cache is not None
+    period = cfg.shared_attn_period or cfg.n_layers
+    n_groups = cfg.n_layers // period
+
+    # reshape stacked mamba params to [n_groups, period, ...]
+    gp = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, period, *a.shape[1:]), params["blocks"])
+
+    def group_body(carry, layer_in):
+        h = carry["x"]
+        gparams = layer_in["p"]
+
+        def inner(carry2, z):
+            h2 = carry2
+            lp, st = z["p"], z["state"]
+            if decode:
+                h2, (s2, c2) = mamba_block(lp, cfg, rules, h2,
+                                           ssm_state=st["ssm"],
+                                           conv_state=st["conv"], decode=True)
+                return h2, {"ssm": s2, "conv": c2}
+            h2, _ = mamba_block(lp, cfg, rules, h2)
+            return h2, 0
+
+        if cfg.remat != "none" and not decode:
+            inner = jax.checkpoint(inner)
+        h, new_states = jax.lax.scan(
+            inner, h, {"p": gparams, "state": layer_in["state"]})
+
+        new_carry = {"x": h}
+        if cfg.shared_attn_period:
+            if decode:
+                h, (kc, vc) = _shared_attn(
+                    params, cfg, rules, h, positions=positions, cache=None,
+                    cache_len=cache_len,
+                    carried_cache=(carry["kc"], carry["vc"], layer_in["gi"]))
+                new_carry = {"x": h, "kc": kc, "vc": vc}
+            else:
+                h, _ = _shared_attn(params, cfg, rules, h,
+                                    positions=positions, cache=None,
+                                    cache_len=cache_len)
+                new_carry = {"x": h}
+        return new_carry, {"state": new_states}
+
+    gi = jnp.arange(n_groups, dtype=jnp.int32)
+    if decode:
+        states = {"ssm": cache["ssm"].reshape(
+                      n_groups, period, *cache["ssm"].shape[1:]),
+                  "conv": cache["conv"].reshape(
+                      n_groups, period, *cache["conv"].shape[1:])}
+        xs = {"p": gp, "state": states, "gi": gi}
+        carry0 = {"x": x}
+        if cfg.shared_attn_period:
+            carry0 = {"x": x, "kc": cache["kv"]["k"],
+                      "vc": cache["kv"]["v"]}
+    else:
+        zero_states = {"ssm": jnp.zeros((n_groups, period, 0)),
+                       "conv": jnp.zeros((n_groups, period, 0))}
+        xs = {"p": gp, "state": zero_states, "gi": gi}
+        carry0 = {"x": x}
+
+    out, ys = jax.lax.scan(group_body, carry0, xs)
+    x = out["x"]
+
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    logits = constrain(logits, rules, "batch", "seq", "vocab")
+
+    new_cache = None
+    if decode:
+        st = ys["state"]
+        new_cache = {
+            "ssm": st["ssm"].reshape(cfg.n_layers, *st["ssm"].shape[2:]),
+            "conv": st["conv"].reshape(cfg.n_layers, *st["conv"].shape[2:]),
+            "kv": ({"k": out["kc"], "v": out["vc"]}
+                   if cfg.shared_attn_period else cache["kv"]),
+        }
+    return logits.astype(jnp.float32), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               kv_rep: int = 1):
+    dtype = dtype or jnp.dtype(cfg.kv_cache_dtype)
+    R = n_shared_applications(cfg)
+    kv_shape = (R, batch, max_len, cfg.n_kv_heads * kv_rep, cfg.hd)
+    return {
+        "kv": {"k": jnp.zeros(kv_shape, dtype),
+               "v": jnp.zeros(kv_shape, dtype)},
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    kv = ("stack", "batch", "seq", "kv_heads", "kv_head_dim")
+    return {
+        "kv": {"k": kv, "v": kv},
+        "ssm": ("stack", "batch", None, "ssm_state", None),
+        "conv": ("stack", "batch", None, "ssm_inner"),
+    }

@@ -1,0 +1,90 @@
+"""Minimal functional parameter system (no flax in this container).
+
+ParamBuilder records, for every parameter, both the initialized array and its
+logical sharding axes — a single source of truth consumed by
+sharding.tree_shardings. Initialization is name-keyed (fold_in of a stable
+hash) so adding parameters never reshuffles existing ones.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _name_seed(path: str) -> int:
+    return int.from_bytes(hashlib.blake2b(path.encode(), digest_size=4).digest(),
+                          "big")
+
+
+class ParamBuilder:
+    def __init__(self, rng: jax.Array, dtype=jnp.float32, path: str = ""):
+        self._rng = rng
+        self.dtype = dtype
+        self.path = path
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def sub(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder(self._rng, self.dtype, f"{self.path}/{name}")
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+    def _key(self, name: str) -> jax.Array:
+        return jax.random.fold_in(self._rng, _name_seed(f"{self.path}/{name}"))
+
+    def param(self, name: str, shape, axes, init: str = "normal",
+              scale: float | None = None, dtype=None) -> jax.Array:
+        assert len(shape) == len(axes), (self.path, name, shape, axes)
+        dtype = dtype or self.dtype
+        if init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+            s = scale if scale is not None else fan_in ** -0.5
+            v = (jax.random.normal(self._key(name), shape, jnp.float32) * s
+                 ).astype(dtype)
+        elif init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif init == "uniform":
+            s = scale if scale is not None else 1.0
+            v = (jax.random.uniform(self._key(name), shape, jnp.float32,
+                                    -s, s)).astype(dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = v
+        self.axes[name] = tuple(axes)
+        return v
+
+
+def stack_layers(rng, dtype, n: int, build_one):
+    """Init `n` structurally-identical layers and stack leaves: [n, ...].
+
+    Layer dim gets logical axis "stack". Used for scan-over-layers.
+    """
+    builders = []
+    for i in range(n):
+        pb = ParamBuilder(jax.random.fold_in(rng, i), dtype, path=f"layer{i}")
+        build_one(pb, i)
+        builders.append(pb)
+    p0, a0 = builders[0].params, builders[0].axes
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[b.params for b in builders])
+    axes = jax.tree_util.tree_map(
+        lambda a: ("stack",) + tuple(a), a0,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return stacked, axes
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))

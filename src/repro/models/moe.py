@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN, GShard-style grouped dispatch (capacity-based,
+einsum dispatch/combine) — the GSPMD-friendly TPU baseline. Experts are
+sharded on the "model" mesh axis (expert parallelism); groups ride the batch
+axes, so dispatch/combine contractions induce the expert all-to-all /
+reduce collectives in the compiled HLO.
+
+moonshot-v1-16b-a3b: 64 experts, top-6.
+arctic-480b: 128 experts, top-2, plus a dense residual MLP in parallel.
+
+The sort-based ragged path (Pallas moe_gmm kernel) is the optimized
+alternative exercised in the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain
+
+GROUP_SIZE = 256  # tokens per dispatch group (GShard 'G'); perf knob
+
+
+def init_moe(pb, cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff
+    m = pb.sub("moe")
+    m.param("router", (D, E), ("embed", "experts"))
+    m.param("wi_gate", (E, D, F), ("experts", "embed", "expert_mlp"))
+    m.param("wi_up", (E, D, F), ("experts", "embed", "expert_mlp"))
+    m.param("wo", (E, F, D), ("experts", "expert_mlp", "embed"))
+    if cfg.dense_residual:
+        L.init_mlp(pb, cfg, prefix="dense_mlp")
+
+
+def _capacity(cfg, g: int) -> int:
+    c = int(g * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4, >=4
+
+
+def moe_mlp(p, cfg, rules, x):
+    """x: [B,S,D] -> [B,S,D]. Returns MoE output (+ dense residual)."""
+    dt = x.dtype
+    mp = p["moe"]
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(GROUP_SIZE, T)      # group across ALL tokens (decode: T=B)
+    n = T // g
+    xg = x.reshape(n, g, D)
+    xg = constrain(xg, rules, "batch", None, "embed")
+
+    logits = jnp.einsum("ngd,de->nge", xg, mp["router"].astype(dt)
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [n,g,K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(cfg, g)
+    combine = jnp.zeros((n, g, E, C), jnp.float32)
+    counts = jnp.zeros((n, 1, E), jnp.int32)
+    for j in range(K):                                     # GShard k-loop
+        oh = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.int32)   # [n,g,E]
+        pos = jnp.cumsum(oh, axis=1) - 1 + counts                    # [n,g,E]
+        counts = counts + oh.sum(axis=1, keepdims=True)
+        keep = (pos < C) & (oh > 0)
+        pos_c = jax.nn.one_hot(jnp.where(keep, pos, -1), C,
+                               dtype=jnp.float32)                     # [n,g,E,C]
+        combine = combine + gate_vals[..., j, None, None] * \
+            (oh[..., None].astype(jnp.float32) * pos_c)
+    dispatch = (combine > 0).astype(dt)                               # [n,g,E,C]
+
+    # dispatch -> [n,E,C,D]; experts on "model", groups on batch axes
+    ein = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    ein = constrain(ein, rules, "batch", "experts", None, "embed")
+    h_g = jnp.einsum("necd,edf->necf", ein, mp["wi_gate"].astype(dt))
+    h_u = jnp.einsum("necd,edf->necf", ein, mp["wi_up"].astype(dt))
+    h = jax.nn.silu(h_g) * h_u
+    h = constrain(h, rules, "batch", "experts", None, "expert_mlp")
+    eo = jnp.einsum("necf,efd->necd", h, mp["wo"].astype(dt))
+    eo = constrain(eo, rules, "batch", "experts", None, "embed")
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(dt), eo)
+    y = constrain(y, rules, "batch", None, "embed")
+    y = y.reshape(B, S, D)
+
+    if cfg.dense_residual:
+        y = y + L.mlp(p["dense_mlp"], rules, x)
+    return y
+
+
+def load_balance_loss(logits_f32, gate_idx, n_experts: int) -> jnp.ndarray:
+    """Standard Switch/GShard auxiliary loss (mean fraction * mean prob)."""
+    probs = jax.nn.softmax(logits_f32, axis=-1)
+    me = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    oh = jax.nn.one_hot(gate_idx[..., 0], n_experts)
+    ce = oh.mean(axis=tuple(range(oh.ndim - 1)))
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,260 @@
+"""RWKV-6 "Finch": attention-free LM with data-dependent per-channel decay.
+
+Time-mix:   wkv recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+            o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora_w(x~_t)))  (data-dependent decay) and
+token-shift ddlerp inputs. Channel-mix: squared-relu MLP.
+
+Training uses a chunked parallel form (cumulative log-decay within chunks +
+state carry across chunks via lax.scan); decode is the recurrence. The
+Pallas rwkv6_scan kernel mirrors the chunked form; this module is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.module import ParamBuilder, stack_layers
+from repro.models import layers as L
+from repro.sharding import constrain
+
+CHUNK = 64
+LORA_W = 64
+LORA_MIX = 32
+
+
+# ------------------------------------------------------------- wkv6 core ----
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = CHUNK):
+    """Chunked wkv6. r,k,v,w: [b,l,h,c] (w in (0,1)); u: [h,c].
+    Returns (o [b,l,h,c], s_final [b,h,c,c]) with s[h, c_k, c_v]."""
+    b, l, h, c = r.shape
+    q = min(chunk, l)
+    nc = l // q
+    assert nc * q == l
+
+    rr = r.reshape(b, nc, q, h, c)
+    kk = k.reshape(b, nc, q, h, c)
+    vv = v.reshape(b, nc, q, h, c)
+    lw = jnp.log(w.astype(jnp.float32).clip(1e-6, 1.0)).reshape(b, nc, q, h, c)
+    lw_cs = jnp.cumsum(lw, axis=2)                       # inclusive cumsum
+
+    # decay from chunk start *through* step t (inclusive)
+    # intra-chunk pairwise term: for t > s:  prod_{s<j<=t-? } ...
+    # o_t(intra) = sum_{s<t} [r_t * exp(lw_cs[t-1] - lw_cs[s])] . k_s  v_s
+    #            + r_t . (u * k_t) v_t
+    ri = rr.astype(jnp.float32) * jnp.exp(
+        jnp.concatenate([jnp.zeros_like(lw_cs[:, :, :1]),
+                         lw_cs[:, :, :-1]], axis=2))      # r_t * W_{t-1}
+    ki = kk.astype(jnp.float32) * jnp.exp(-lw_cs)         # k_s / W_s
+    att = jnp.einsum("bzthc,bzshc->bzhts", ri, ki)
+    tri = jnp.tril(jnp.ones((q, q), bool), k=-1)          # strictly lower
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    bonus = jnp.einsum("bzthc,bzthc->bzth",
+                       rr.astype(jnp.float32),
+                       u.astype(jnp.float32) * kk.astype(jnp.float32))
+    o_intra = jnp.einsum("bzhts,bzshc->bzthc", att, vv.astype(jnp.float32)) \
+        + bonus[..., None] * vv.astype(jnp.float32)
+
+    # cross-chunk: o_t += (r_t * W_{t-1}) @ S_chunk_start
+    # chunk-final state: S' = diag(W_q) S + sum_s (W_q / W_s * k_s)^T v_s
+    w_tot = jnp.exp(lw_cs[:, :, -1])                      # [b,nc,h,c]
+    k_scaled = kk.astype(jnp.float32) * jnp.exp(lw_cs[:, :, -1:] - lw_cs)
+    chunk_states = jnp.einsum("bzshc,bzshd->bzhcd", k_scaled,
+                              vv.astype(jnp.float32))
+
+    def step(s, z):
+        st, dec = z
+        return s * dec[..., None] + st, s
+    s_init = (jnp.zeros((b, h, c, c), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+    s_fin, s_prevs = jax.lax.scan(
+        step, s_init, (chunk_states.swapaxes(0, 1), w_tot.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                       # [b,nc,h,c,c]
+
+    o_cross = jnp.einsum("bzthc,bzhcd->bzthd", ri, s_prevs)
+    o = (o_intra + o_cross).reshape(b, l, h, c)
+    return o.astype(r.dtype), s_fin
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """One decode step. r,k,v,w: [b,h,c]; u [h,c]; s [b,h,c,c]."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    kv = jnp.einsum("bhc,bhd->bhcd", kf, vf)
+    o = jnp.einsum("bhc,bhcd->bhd", rf, s + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s = s * wf[..., None] + kv
+    return o.astype(r.dtype), s
+
+
+# --------------------------------------------------------------- layers -----
+
+def _init_time_mix(pb: ParamBuilder, cfg: ModelConfig):
+    D = cfg.d_model
+    t = pb.sub("tmix")
+    t.param("mix_base", (D,), ("embed",), init="zeros")
+    t.param("mix_lora_A", (D, LORA_MIX), ("embed", None))
+    t.param("mix_lora_B", (5, LORA_MIX, D), (None, None, "embed"),
+            init="zeros")
+    t.param("mix_mu", (5, D), (None, "embed"), init="zeros")
+    t.param("decay_base", (D,), ("embed",), init="zeros")
+    t.param("decay_lora_A", (D, LORA_W), ("embed", None))
+    t.param("decay_lora_B", (LORA_W, D), (None, "embed"), init="zeros")
+    t.param("bonus", (D,), ("embed",), init="zeros")
+    for nm in ("wr", "wk", "wv", "wg"):
+        t.param(nm, (D, D), ("embed", "heads_flat"))
+    t.param("wo", (D, D), ("heads_flat", "embed"))
+    t.param("ln_x", (D,), ("embed",), init="ones")
+
+
+def _init_channel_mix(pb: ParamBuilder, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    m = pb.sub("cmix")
+    m.param("mu_k", (D,), ("embed",), init="zeros")
+    m.param("mu_r", (D,), ("embed",), init="zeros")
+    m.param("wk", (D, F), ("embed", "mlp"))
+    m.param("wv", (F, D), ("mlp", "embed"))
+    m.param("wr", (D, D), ("embed", "embed2"))
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} (zeros / supplied carry at t=0).
+    x [B,L,D]; last [B,1,D] -> (shifted, new_last)."""
+    prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return prev, x[:, -1:]
+
+
+def time_mix(p, cfg, rules, x, *, shift_state, wkv_state, decode=False):
+    dt_ = x.dtype
+    D = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    t = p["tmix"]
+    prev, new_shift = _shift(x, shift_state)
+    dx = prev - x
+    # ddlerp: 5 interpolated views (w,k,v,r,g)
+    base = x + dx * t["mix_base"].astype(dt_)
+    lora = jnp.einsum("bld,dr->blr", base, t["mix_lora_A"].astype(dt_))
+    lora = jnp.einsum("blr,mrd->mbld", jnp.tanh(lora),
+                      t["mix_lora_B"].astype(dt_))
+    mixed = x[None] + dx[None] * (t["mix_mu"].astype(dt_)[:, None, None]
+                                  + lora)
+    xw, xk, xv, xr, xg = mixed
+
+    dw = jnp.einsum("bld,dr->blr", jnp.tanh(
+        jnp.einsum("bld,dr->blr", xw, t["decay_lora_A"].astype(dt_))),
+        t["decay_lora_B"].astype(dt_))
+    w = jnp.exp(-jnp.exp(t["decay_base"].astype(jnp.float32)
+                         + dw.astype(jnp.float32)))        # (0,1) [B,L,D]
+
+    r = jnp.einsum("bld,de->ble", xr, t["wr"].astype(dt_))
+    k = jnp.einsum("bld,de->ble", xk, t["wk"].astype(dt_))
+    v = jnp.einsum("bld,de->ble", xv, t["wv"].astype(dt_))
+    g = jnp.einsum("bld,de->ble", xg, t["wg"].astype(dt_))
+    hsplit = lambda z: z.reshape(*z.shape[:-1], H, hd)
+    u = t["bonus"].astype(jnp.float32).reshape(H, hd)
+
+    if decode:
+        o, new_state = wkv6_step(hsplit(r)[:, 0], hsplit(k)[:, 0],
+                                 hsplit(v)[:, 0], hsplit(w)[:, 0], u,
+                                 wkv_state)
+        o = o[:, None]
+    else:
+        o, new_state = wkv6_chunked(hsplit(r), hsplit(k), hsplit(v),
+                                    hsplit(w), u, s0=wkv_state)
+    o = o.reshape(*o.shape[:-2], D)
+    o = L.rmsnorm(o, t["ln_x"]) * jax.nn.silu(g)
+    out = jnp.einsum("ble,ed->bld", o, t["wo"].astype(dt_))
+    return constrain(out, rules, "batch", "seq", "embed"), new_shift, new_state
+
+
+def channel_mix(p, cfg, rules, x, *, shift_state):
+    dt_ = x.dtype
+    m = p["cmix"]
+    prev, new_shift = _shift(x, shift_state)
+    dx = prev - x
+    xk = x + dx * m["mu_k"].astype(dt_)
+    xr = x + dx * m["mu_r"].astype(dt_)
+    kk = jnp.einsum("bld,df->blf", xk, m["wk"].astype(dt_))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = constrain(kk, rules, "batch", "seq", "mlp")
+    vv = jnp.einsum("blf,fd->bld", kk, m["wv"].astype(dt_))
+    rr = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr, m["wr"].astype(dt_)))
+    return constrain(rr * vv, rules, "batch", "seq", "embed"), new_shift
+
+
+# ------------------------------------------------------------------ model ---
+
+def init(rng, cfg: ModelConfig):
+    pb = ParamBuilder(rng, jnp.dtype(cfg.params_dtype))
+    pb.param("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+             scale=1.0)
+    def one(lpb, i):
+        _init_time_mix(lpb, cfg)
+        _init_channel_mix(lpb, cfg)
+        lpb.param("ln1", (cfg.d_model,), ("embed",), init="ones")
+        lpb.param("ln2", (cfg.d_model,), ("embed",), init="ones")
+    blocks, axes = stack_layers(rng, jnp.dtype(cfg.params_dtype),
+                                cfg.n_layers, one)
+    pb.params["blocks"] = blocks
+    pb.axes["blocks"] = axes
+    pb.param("final_norm", (cfg.d_model,), ("embed",), init="ones")
+    pb.param("lm_head", (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    return pb.params, pb.axes
+
+
+def forward(params, cfg: ModelConfig, rules, tokens, *, positions=None,
+            cache=None, cache_len=None, embeds=None):
+    """cache (decode): {wkv: [L,B,H,hd,hd] f32, shift1/shift2: [L,B,1,D]}."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[tokens]
+    B, S, D = x.shape
+    x = constrain(x, rules, "batch", "seq", "embed")
+    decode = cache is not None
+
+    def body(carry, z):
+        h = carry
+        lp = z["p"]
+        if decode:
+            st = z["st"]
+            tm, s1, wkv = time_mix(lp, cfg, rules, L.rmsnorm(h, lp["ln1"]),
+                                   shift_state=st["shift1"],
+                                   wkv_state=st["wkv"], decode=True)
+            h = h + tm
+            cm, s2 = channel_mix(lp, cfg, rules, L.rmsnorm(h, lp["ln2"]),
+                                 shift_state=st["shift2"])
+            h = h + cm
+            return h, {"wkv": wkv, "shift1": s1, "shift2": s2}
+        zero1 = jnp.zeros((B, 1, D), dt)
+        tm, _, _ = time_mix(lp, cfg, rules, L.rmsnorm(h, lp["ln1"]),
+                            shift_state=zero1, wkv_state=None)
+        h = h + tm
+        cm, _ = channel_mix(lp, cfg, rules, L.rmsnorm(h, lp["ln2"]),
+                            shift_state=zero1)
+        return h + cm, 0
+
+    if cfg.remat != "none" and not decode:
+        body = jax.checkpoint(body)
+    xs = {"p": params["blocks"]}
+    if decode:
+        xs["st"] = cache
+    x, ys = jax.lax.scan(body, x, xs)
+
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    logits = constrain(logits, rules, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32), (ys if decode else None)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               kv_rep: int = 1):
+    del max_len, kv_rep  # O(1) state — the whole point of long_500k on SSMs
+    L_, B, H, hd, D = cfg.n_layers, batch, cfg.n_heads, cfg.hd, cfg.d_model
+    return {"wkv": jnp.zeros((L_, B, H, hd, hd), jnp.float32),
+            "shift1": jnp.zeros((L_, B, 1, D), dtype),
+            "shift2": jnp.zeros((L_, B, 1, D), dtype)}
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"wkv": ("stack", "batch", "heads", None, None),
+            "shift1": ("stack", "batch", None, "embed"),
+            "shift2": ("stack", "batch", None, "embed")}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.compression import compress_tree, decompress_tree
+
+__all__ = ["AdamW", "OptState", "compress_tree", "decompress_tree"]

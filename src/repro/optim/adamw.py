@@ -1,0 +1,88 @@
+"""AdamW with global-norm clipping; optimizer moments inherit the parameter
+sharding (axes tree passthrough) so state is fully distributed.
+
+`moments_dtype="bfloat16"` halves optimizer HBM for the huge archs
+(arctic-480b) — recorded in DESIGN.md as a deployment knob.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class OptState:
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.m, s.v, s.count), None),
+    lambda aux, children: OptState(*children))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree_util.tree_leaves(tree)))
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.moments_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return OptState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def state_axes(self, param_axes) -> OptState:
+        """Sharding axes for the state: moments follow params."""
+        return OptState(m=param_axes, v=param_axes, count=())
+
+    def update(self, grads, state: OptState, params):
+        dt = jnp.dtype(self.moments_dtype)
+        count = state.count + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+        b1, b2 = self.beta1, self.beta2
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mh = m_new / c1
+            vh = v_new / c2
+            step = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - self.lr * step
+            return p_new.astype(p.dtype), m_new.astype(dt), v_new.astype(dt)
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(m=new_m, v=new_v, count=count), gnorm

@@ -1,0 +1,394 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's compiled.cost_analysis() counts a while-loop body ONCE, which
+undercounts scan-over-layers models by n_layers x. This module parses the
+optimized HLO, resolves the call graph (fusions, calls, while bodies), and
+multiplies loop bodies by their known_trip_count — yielding per-device
+flops, approximate HBM bytes, and collective wire bytes suitable for the
+roofline terms.
+
+Conventions:
+  flops: dot = 2 * prod(result_shape) * contraction_size; convolutions and
+         elementwise flops are ignored (dots dominate transformer math).
+  bytes: per instruction = sum(unique operand bytes) + result bytes, for
+         top-level instructions of each computation (fusion internals are
+         free — they live in registers/VMEM). bitcast/tuple/gte/parameter
+         are free.
+  collectives: per-op result bytes with ring-model wire multipliers (see
+         roofline.parse_collectives), times the loop multiplier.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+_FREE_OPS = {
+    "bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+    "after-all", "iota", "partition-id", "replica-id",
+    # dtype-only converts are XLA-CPU bf16-emulation artifacts; on TPU they
+    # fold into the neighboring fusion (the roofline target is TPU v5e)
+    "convert",
+}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{")
+_INST = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[\w\[\],{}\/*]+))\s+"
+    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_elems(type_str: str) -> int:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: list = field(default_factory=list)   # (op, result_bytes, group)
+    calls: list = field(default_factory=list)  # (comp_name, multiplier)
+    fusions: list = field(default_factory=list)  # (comp, opnd_bytes, result)
+    # in-place root info for fusion byte accounting:
+    root_op: str = ""
+    root_update_bytes: float = 0.0
+    # per-parameter effective bytes (None = count full operand): set when a
+    # parameter is consumed only by a dynamic-slice inside this computation
+    param_eff: list = field(default_factory=list)
+    # biggest internal dynamic-update-slice (robust to convert-wrapped
+    # roots): marks the fusion as aliasing-in-place
+    dus_result: float = 0.0
+    dus_update: float = 0.0
+
+
+@dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    coll_wire_bytes: float
+    coll_simple_bytes: float
+    coll_by_op: dict
+    unknown_trip_loops: int
+    detail: dict | None = None   # comp -> (multiplier, local_bytes, flops)
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = [line.strip()]
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+            if line.strip() == "}":
+                cur = None
+    return comps
+
+
+def analyze(text: str, detail: bool = False) -> HloCost:
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line.strip())
+        if m and m.group(1):
+            entry = m.group(2)
+    # per-computation local stats
+    stats: dict[str, CompStats] = {}
+    shapes_global: dict[str, str] = {}
+    unknown_loops = [0]
+
+    for name, lines in comps.items():
+        st = CompStats()
+        shapes: dict[str, str] = {}
+        # params from header (in declaration order == call-site operand order)
+        param_names: list[str] = []
+        hdr = _COMP_HEADER.match(lines[0])
+        if hdr:
+            for pm in re.finditer(r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])",
+                                  hdr.group(3)):
+                shapes[pm.group(1)] = pm.group(2)
+                param_names.append(pm.group(1))
+        # param -> (use_count, ds_result_bytes or None)
+        uses: dict[str, int] = {p: 0 for p in param_names}
+        ds_of: dict[str, float] = {}
+        for line in lines[1:]:
+            for o in _OPERANDS.findall(line.split(" = ")[-1]):
+                if o in uses:
+                    uses[o] += 1
+            mm = _INST.match(line)
+            if mm and mm.group(3) == "dynamic-slice":
+                ops_ = _OPERANDS.findall(line[mm.end():])
+                if ops_ and ops_[0] in uses:
+                    ds_of[ops_[0]] = _type_bytes(mm.group(2))
+        st.param_eff = [
+            2.0 * ds_of[p] if (p in ds_of and uses.get(p, 0) == 1) else None
+            for p in param_names]
+        for line in lines[1:]:
+            m = _INST.match(line)
+            if not m:
+                continue
+            iname, itype, op = m.group(1), m.group(2).strip(), m.group(3)
+            shapes[iname] = itype
+            shapes_global[iname] = itype
+            is_root = line.lstrip().startswith("ROOT")
+            if op in _FREE_OPS:
+                if is_root:
+                    st.root_op = op
+                continue
+            after = line[m.end():]
+            # operands: names up to the closing paren of the op call
+            depth, i = 1, 0
+            while i < len(after) and depth:
+                if after[i] == "(":
+                    depth += 1
+                elif after[i] == ")":
+                    depth -= 1
+                i += 1
+            opnames = _OPERANDS.findall(after[:i])
+            if is_root:
+                st.root_op = op
+                if op == "dynamic-update-slice" and len(opnames) >= 2:
+                    st.root_update_bytes = _type_bytes(
+                        shapes.get(opnames[1], ""))
+            if op == "dynamic-update-slice":
+                # in-place: read+write only the updated slice
+                upd = _type_bytes(shapes.get(opnames[1], "")) \
+                    if len(opnames) >= 2 else 0
+                r = _type_bytes(itype)
+                if r > st.dus_result:
+                    st.dus_result = r
+                    st.dus_update = upd
+                st.bytes += 2.0 * upd
+                continue
+            if op == "dynamic-slice":
+                st.bytes += 2.0 * _type_bytes(itype)
+                continue
+
+            if op == "while":
+                body = _BODY.search(line)
+                cond = _COND.search(line)
+                trip = _TRIP.search(line)
+                n = int(trip.group(1)) if trip else None
+                if n is None:
+                    n = _infer_trip(comps, cond.group(1) if cond else None,
+                                    shapes)
+                    if n is None:
+                        unknown_loops[0] += 1
+                        n = 1
+                if body:
+                    st.calls.append((body.group(1), n, True))
+                if cond:
+                    st.calls.append((cond.group(1), n, True))
+                continue
+            if op in ("fusion", "call", "async-start"):
+                c = _CALLS.search(line)
+                if c:
+                    st.calls.append((c.group(1), 1, False))
+                    # byte accounting deferred: in-place DUS/DS roots and
+                    # sliced params are only known once all comps are parsed
+                    st.fusions.append((
+                        c.group(1),
+                        tuple(_type_bytes(shapes.get(o, ""))
+                              for o in opnames),   # positional, no dedup
+                        _type_bytes(itype)))
+                    continue
+                st.bytes += sum(_type_bytes(shapes.get(o, ""))
+                                for o in dict.fromkeys(opnames))
+                st.bytes += _type_bytes(itype)
+                continue
+            if op == "conditional":
+                for c in _OPERANDS.findall(line):
+                    if c in comps:
+                        st.calls.append((c, 1, True))
+                continue
+            if op in _COLLECTIVES or (op.endswith("-start")
+                                      and op[:-6] in _COLLECTIVES):
+                base = op[:-6] if op.endswith("-start") else op
+                g = _group_size(line)
+                st.coll.append((base, _type_bytes(itype), g))
+                st.bytes += _type_bytes(itype)
+                continue
+            if op == "dot":
+                cm = _CONTRACT.search(line)
+                csize = 1
+                if cm and opnames:
+                    lhs_type = shapes.get(opnames[0], "")
+                    sm = _SHAPE.search(lhs_type)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",")
+                                if d.strip()]
+                        for ci in cm.group(1).split(","):
+                            if ci.strip() and int(ci) < len(dims):
+                                csize *= dims[int(ci)]
+                st.flops += 2.0 * _result_elems(itype) * csize
+            # generic data movement
+            st.bytes += sum(_type_bytes(shapes.get(o, ""))
+                            for o in dict.fromkeys(opnames))
+            st.bytes += _type_bytes(itype)
+        stats[name] = st
+
+    # second pass: fusion byte accounting with in-place root and sliced-param
+    # awareness
+    for st in stats.values():
+        for (cname, opnd_bytes, res_bytes) in st.fusions:
+            callee = stats.get(cname)
+            eff = list(opnd_bytes)
+            if callee is not None:
+                for i in range(min(len(eff), len(callee.param_eff))):
+                    if callee.param_eff[i] is not None:
+                        eff[i] = callee.param_eff[i]
+            inplace_dus = callee is not None and (
+                callee.root_op == "dynamic-update-slice"
+                or (callee.dus_result > 0
+                    and callee.dus_result >= 0.5 * res_bytes))
+            if inplace_dus:
+                # aliased in-place update: count non-aliased operands + the
+                # updated slice twice (read-modify-write), not the buffer.
+                # The aliased operand may carry a different dtype width
+                # (bf16 emulation) — drop the largest operand instead.
+                total = sum(eff) - (max(eff) if eff else 0.0)
+                upd = callee.root_update_bytes or callee.dus_update
+                st.bytes += total + 2.0 * upd
+            elif callee is not None and callee.root_op == "dynamic-slice":
+                others = sum(sorted(eff)[:-1]) if eff else 0
+                st.bytes += others + 2.0 * res_bytes
+            else:
+                st.bytes += sum(eff) + res_bytes
+
+    # resolve call graph from entry
+    memo: dict[str, tuple] = {}
+
+    def resolve(name: str):
+        if name in memo:
+            return memo[name]
+        st = stats.get(name)
+        if st is None:
+            return (0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        f, b = st.flops, st.bytes
+        coll: dict[str, list] = {}
+        for (cop, cbytes, g) in st.coll:
+            coll.setdefault(cop, []).append((cbytes, g, 1.0))
+        for cname, mult, inc_bytes in st.calls:
+            cf, cb, cc = resolve(cname)
+            f += mult * cf
+            if inc_bytes:
+                b += mult * cb
+            for cop, items in cc.items():
+                coll.setdefault(cop, []).extend(
+                    (cb_, g_, m_ * mult) for cb_, g_, m_ in items)
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    if entry is None:
+        entry = list(comps)[-1] if comps else ""
+    f, b, coll = resolve(entry)
+
+    det = None
+    if detail:
+        parents: dict[str, list] = {}
+        for cn, st in stats.items():
+            for sub, m, _inc in st.calls:
+                parents.setdefault(sub, []).append((cn, m))
+        mcache: dict[str, float] = {}
+
+        def mult(cn: str) -> float:
+            if cn == entry:
+                return 1.0
+            if cn in mcache:
+                return mcache[cn]
+            mcache[cn] = 0.0  # cycle guard
+            mcache[cn] = sum(mult(p) * w for p, w in parents.get(cn, []))
+            return mcache[cn]
+
+        det = {cn: (mult(cn), st.bytes, st.flops)
+               for cn, st in stats.items()}
+
+    wire = simple = 0.0
+    by_op: dict[str, dict] = {}
+    for cop, items in coll.items():
+        for cbytes, g, mult in items:
+            if cop == "all-reduce":
+                w = 2 * (g - 1) / g * cbytes
+            elif cop in ("all-gather", "all-to-all"):
+                w = (g - 1) / g * cbytes
+            elif cop == "reduce-scatter":
+                w = (g - 1) * cbytes
+            else:
+                w = float(cbytes)
+            wire += mult * w
+            simple += mult * cbytes
+            d = by_op.setdefault(cop, {"count": 0.0, "bytes": 0.0,
+                                       "wire": 0.0})
+            d["count"] += mult
+            d["bytes"] += mult * cbytes
+            d["wire"] += mult * w
+    return HloCost(flops=f, hbm_bytes=b, coll_wire_bytes=wire,
+                   coll_simple_bytes=simple, coll_by_op=by_op,
+                   unknown_trip_loops=unknown_loops[0], detail=det)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    return 2
+
+
+def _infer_trip(comps, cond_name, parent_shapes) -> int | None:
+    """Fallback: find `constant(N)` compared against in the condition."""
+    if not cond_name or cond_name not in comps:
+        return None
+    best = None
+    for line in comps[cond_name]:
+        m = re.search(r"constant\((\d+)\)", line)
+        if m:
+            v = int(m.group(1))
+            if best is None or v > best:
+                best = v
+    return best

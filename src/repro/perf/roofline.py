@@ -1,0 +1,142 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware constants (TPU v5e, per chip):
+  peak bf16 compute   197 TFLOP/s
+  HBM bandwidth       819 GB/s
+  ICI link bandwidth  ~50 GB/s/link
+
+Terms (per device; the SPMD module IS the per-device program):
+  compute_s    = flops_dev / PEAK_FLOPS
+  memory_s     = hbm_bytes_dev / HBM_BW
+  collective_s = wire_bytes_dev / ICI_BW
+
+collective bytes are not in cost_analysis: we parse the optimized HLO and
+apply a ring model per collective (all-reduce 2(g-1)/g, all-gather and
+all-to-all (g-1)/g of the result bytes, reduce-scatter (g-1)x result,
+collective-permute 1x). The raw sum-of-operand-bytes (the spec's simple
+formula) is also recorded as `collective_bytes_simple`.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [ngroups,group_size]
+        return max(1, int(m.group(2)))
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0           # ring-model bytes per device
+    simple_bytes: float = 0.0         # raw result-size sum (spec formula)
+    by_op: dict = None
+
+    def __post_init__(self):
+        if self.by_op is None:
+            self.by_op = {}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        g = _group_size(line)
+        if op == "all-reduce":
+            wire = 2 * (g - 1) / g * nbytes
+        elif op in ("all-gather", "all-to-all"):
+            wire = (g - 1) / g * nbytes
+        elif op == "reduce-scatter":
+            wire = (g - 1) * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        st.wire_bytes += wire
+        st.simple_bytes += nbytes
+        d = st.by_op.setdefault(op, {"count": 0, "bytes": 0.0, "wire": 0.0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["wire"] += wire
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_dev: float
+    hbm_bytes_dev: float
+    wire_bytes_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_flops_ratio: float   # MODEL_FLOPS / (flops_dev * chips)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(flops_dev: float, hbm_bytes_dev: float,
+                   wire_bytes_dev: float, model_flops_total: float,
+                   chips: int) -> Roofline:
+    c = flops_dev / PEAK_FLOPS
+    m = hbm_bytes_dev / HBM_BW
+    k = wire_bytes_dev / ICI_BW
+    terms = {"compute": c, "memory": m, "collective": k}
+    bottleneck = max(terms, key=terms.get)
+    ratio = (model_flops_total / (flops_dev * chips)) if flops_dev else 0.0
+    return Roofline(flops_dev, hbm_bytes_dev, wire_bytes_dev, c, m, k,
+                    bottleneck, model_flops_total, ratio)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N_active*B per token (decode),
+    N_active for MoE."""
+    n_active = cfg.active_param_count()
+    toks = shape.global_batch * shape.seq_len
+    kind = shape.kind.value
+    if kind == "train":
+        return 6.0 * n_active * toks
+    if kind == "prefill":
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq

@@ -1,0 +1,179 @@
+"""Batched UDP token-serving loop — the paper's echo server (§7.3)
+generalized: requests arrive as UDP packets, are batched, run through the
+model's serve_step, and answered with sendto.
+
+Two paths, mirroring the paper's comparison:
+  * GENESYS path: recvfrom/sendto are GENESYS syscalls at work-group
+    granularity with blocking + weak ordering (the paper's exact choice for
+    its echo server);
+  * CPU baseline: a classic host loop that owns the socket and babysits the
+    accelerator (Fig 1 left).
+"""
+from __future__ import annotations
+
+import socket
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.genesys import Genesys, Sys
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+
+
+class GenesysUdpServer:
+    """Echo/decode server whose network I/O is GENESYS syscalls."""
+
+    def __init__(self, gsys: Genesys, *, port: int, max_batch: int = 8,
+                 batch_window_s: float = 0.005, payload: int = 4096):
+        self.gsys = gsys
+        self.port = port
+        self.max_batch = max_batch
+        self.window = batch_window_s
+        self.payload = payload
+        self.fd = gsys.call(Sys.SOCKET, socket.AF_INET, socket.SOCK_DGRAM, 0)
+        gsys.call(Sys.BIND, self.fd, port)
+        sock = gsys.table._sockets[self.fd]
+        sock.settimeout(0.2)
+        self.stats = ServeStats()
+        self._pending_handles: list[int] = []
+
+    def poll_requests(self) -> list[np.ndarray]:
+        """Gather up to max_batch datagrams within the batching window
+        (blocking weak-ordered recvfrom syscalls). The first receive waits
+        the idle timeout; follow-ups only wait the short batching window so
+        a lone request is answered immediately."""
+        out = []
+        sock = self.gsys.table._sockets[self.fd]
+        idle_timeout = sock.gettimeout()
+        try:
+            while len(out) < self.max_batch:
+                bh = self.gsys.heap.new_buffer(self.payload)
+                n = self.gsys.call(Sys.RECVFROM, self.fd, bh, self.payload)
+                if n > 0:
+                    out.append(np.asarray(
+                        self.gsys.heap.resolve(bh))[:n].copy())
+                    sock.settimeout(self.window)
+                self.gsys.heap.release(bh)
+                if n <= 0:
+                    break
+        finally:
+            try:
+                sock.settimeout(idle_timeout)
+            except OSError:
+                pass   # socket closed during shutdown
+        return out
+
+    def reply(self, payloads: list[bytes], port: int) -> None:
+        for p in payloads:
+            bh = self.gsys.heap.register(
+                np.frombuffer(p, dtype=np.uint8).copy())
+            self.gsys.call(Sys.SENDTO, self.fd, bh, len(p), port,
+                           blocking=False)   # producer role: weak, non-block
+            # handle stays alive until the next drain (async send reads it)
+            self._pending_handles.append(bh)
+
+    def _release_pending(self) -> None:
+        for bh in self._pending_handles:
+            self.gsys.heap.release(bh)
+        self._pending_handles.clear()
+
+    def serve_echo(self, *, n_batches: int, reply_port: int,
+                   n_requests: int | None = None) -> ServeStats:
+        """Pure echo mode (the paper's microbenchmark). Stops after
+        `n_requests` total packets if given, else after `n_batches`."""
+        t0 = time.monotonic()
+        done = 0
+        while (self.stats.requests < n_requests if n_requests is not None
+               else done < n_batches):
+            reqs = self.poll_requests()
+            if not reqs:
+                continue
+            self.reply([r.tobytes() for r in reqs], reply_port)
+            self.stats.requests += len(reqs)
+            self.stats.batches += 1
+            done += 1
+        self.gsys.drain()
+        self._release_pending()
+        self.stats.wall_s = time.monotonic() - t0
+        return self.stats
+
+    def serve_model(self, serve_fn, params, cache, *, n_batches: int,
+                    reply_port: int, max_tokens: int = 8) -> ServeStats:
+        """Decode-loop mode: each request's payload is int32 prompt tokens;
+        respond with greedily decoded continuations."""
+        t0 = time.monotonic()
+        done = 0
+        cache_len = jnp.zeros((cache_batch_size(cache),), jnp.int32)
+        while done < n_batches:
+            reqs = self.poll_requests()
+            if not reqs:
+                continue
+            toks = [np.frombuffer(r.tobytes(), dtype=np.int32) for r in reqs]
+            outs = []
+            for t in toks:
+                cur = jnp.asarray(t[-1:]).reshape(1, 1)
+                gen = []
+                cl = cache_len
+                c = cache
+                for _ in range(max_tokens):
+                    nxt, c = serve_fn(params, c, cur, cl[:1])
+                    gen.append(int(nxt[0]))
+                    cur = nxt.reshape(1, 1)
+                    cl = cl + 1
+                outs.append(np.asarray(gen, dtype=np.int32).tobytes())
+                self.stats.tokens_out += len(gen)
+            self.reply(outs, reply_port)
+            self.stats.requests += len(reqs)
+            self.stats.batches += 1
+            done += 1
+        self.gsys.drain()
+        self._release_pending()
+        self.stats.wall_s = time.monotonic() - t0
+        return self.stats
+
+    def close(self) -> None:
+        self.gsys.call(Sys.CLOSE, self.fd)
+
+
+def cache_batch_size(cache) -> int:
+    leaves = jax.tree_util.tree_leaves(cache)
+    return leaves[0].shape[1]
+
+
+class CpuBaselineUdpServer:
+    """The paper's CPU path: plain socket loop, no GENESYS."""
+
+    def __init__(self, *, port: int, payload: int = 4096):
+        self.sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        self.sock.bind(("127.0.0.1", port))
+        self.sock.settimeout(0.2)
+        self.payload = payload
+        self.stats = ServeStats()
+
+    def serve_echo(self, *, n_batches: int, reply_port: int) -> ServeStats:
+        t0 = time.monotonic()
+        done = 0
+        while done < n_batches:
+            try:
+                data, _ = self.sock.recvfrom(self.payload)
+            except socket.timeout:
+                continue
+            self.sock.sendto(data, ("127.0.0.1", reply_port))
+            self.stats.requests += 1
+            self.stats.batches += 1
+            done += 1
+        self.stats.wall_s = time.monotonic() - t0
+        return self.stats
+
+    def close(self) -> None:
+        self.sock.close()

@@ -1,0 +1,22 @@
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))  # proptest helper
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture()
+def gsys():
+    from repro.core.genesys import Genesys, GenesysConfig
+    g = Genesys(GenesysConfig(n_workers=2, coalesce_window_us=100,
+                              coalesce_max=8))
+    yield g
+    g.shutdown()

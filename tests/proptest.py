@@ -1,0 +1,23 @@
+"""Tiny seeded property-testing harness (hypothesis is not installed in
+this container). Same idea: run an invariant over many random cases; on
+failure report the seed + case so it reproduces deterministically."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def for_all(n_cases: int = 50, seed: int = 0):
+    """Decorator: fn(rng) is run n_cases times with independent rngs."""
+    def deco(fn):
+        def runner():
+            for i in range(n_cases):
+                rng = np.random.default_rng(seed * 100003 + i)
+                try:
+                    fn(rng)
+                except Exception as e:  # noqa: BLE001
+                    raise AssertionError(
+                        f"property {fn.__name__} failed on case {i} "
+                        f"(seed={seed * 100003 + i}): {e}") from e
+        runner.__name__ = fn.__name__
+        return runner
+    return deco

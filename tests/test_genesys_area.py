@@ -1,0 +1,109 @@
+"""Slot state machine (paper Figs 3-4): layout, transitions, contention."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.genesys.area import (SLOT_BYTES, IllegalTransition, SlotState,
+                                     SyscallArea)
+from proptest import for_all
+
+
+def test_slot_is_one_cache_line():
+    assert SLOT_BYTES == 64  # paper §5: 64 bytes per slot, padded
+
+
+def test_lifecycle_blocking():
+    a = SyscallArea(4)
+    t = a.acquire(hw_id=7)
+    assert a.state_of(t.slot) == SlotState.POPULATING
+    a.post(t, 17, [1, 2, 3], blocking=True)
+    assert a.state_of(t.slot) == SlotState.READY
+    assert a.claim_for_processing(t.slot)
+    assert a.state_of(t.slot) == SlotState.PROCESSING
+    a.complete(t.slot, 42)
+    assert a.state_of(t.slot) == SlotState.FINISHED
+    assert a.wait(t) == 42
+    assert a.state_of(t.slot) == SlotState.FREE
+
+
+def test_lifecycle_nonblocking_retires_to_free():
+    a = SyscallArea(4)
+    t = a.acquire(0)
+    a.post(t, 17, [0], blocking=False)
+    a.claim_for_processing(t.slot)
+    a.complete(t.slot, 99)
+    assert a.state_of(t.slot) == SlotState.FREE
+    # result not retrievable (paper: non-blocking discards retval)
+    assert a.wait(t) == 0
+
+
+def test_negative_retval_roundtrip():
+    a = SyscallArea(2)
+    t = a.acquire(0)
+    a.post(t, 1, [], blocking=True)
+    a.claim_for_processing(t.slot)
+    a.complete(t.slot, -38)   # -ENOSYS
+    assert a.wait(t) == -38
+
+
+def test_illegal_transitions_rejected():
+    a = SyscallArea(2)
+    t = a.acquire(0)
+    with pytest.raises(IllegalTransition):
+        a.complete(t.slot, 0)          # POPULATING -> FINISHED illegal
+    assert not a.claim_for_processing(t.slot)   # not READY -> no-op
+
+
+def test_exhaustion_blocks_until_free():
+    """Paper Fig 4: 'if the slot is not free, invocation is delayed'."""
+    a = SyscallArea(1)
+    t = a.acquire(0)
+    a.post(t, 1, [], blocking=True)
+    got = []
+
+    def second():
+        t2 = a.acquire(1)          # must block until t is consumed
+        got.append(t2)
+
+    th = threading.Thread(target=second, daemon=True)
+    th.start()
+    th.join(0.2)
+    assert not got, "acquire should have blocked on a full area"
+    a.claim_for_processing(t.slot)
+    a.complete(t.slot, 0)
+    a.wait(t)
+    th.join(2)
+    assert got and got[0].slot == t.slot
+
+
+@for_all(n_cases=25)
+def test_property_concurrent_lifecycles_preserve_invariants(rng):
+    """N threads × M random syscall lifecycles: every slot ends FREE, the
+    free list has no duplicates, and retvals route to the right caller."""
+    a = SyscallArea(8)
+    errors = []
+
+    def worker(wid):
+        try:
+            for i in range(10):
+                t = a.acquire(wid)
+                blocking = bool(rng.integers(0, 2))
+                a.post(t, 5, [wid, i], blocking)
+                assert a.claim_for_processing(t.slot)
+                a.complete(t.slot, wid * 1000 + i)
+                if blocking:
+                    assert a.wait(t) == wid * 1000 + i
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(10)
+    assert not errors, errors
+    assert a.in_flight() == 0
+    assert sorted(a._free) == list(range(8))
+    states = [a.state_of(s) for s in range(8)]
+    assert all(s == SlotState.FREE for s in states)

@@ -1,0 +1,144 @@
+"""Executor coalescing + invocation semantics (granularity x ordering x
+blocking), host and jit paths."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.genesys import (Genesys, GenesysConfig, Granularity, Ordering,
+                                Sys)
+from repro.core.genesys.invoke import pack_args, _split64, _join64
+from proptest import for_all
+
+
+# ------------------------------------------------------------ coalescing ----
+
+def test_coalescing_respects_max():
+    g = Genesys(GenesysConfig(n_workers=1, coalesce_window_us=20000,
+                              coalesce_max=4))
+    try:
+        for _ in range(10):
+            g.call(Sys.CLOCK_GETTIME, 0, blocking=False)
+        g.drain()
+        assert max(g.executor.stats.coalesce_hist) <= 4
+        assert g.executor.stats.processed == 10
+    finally:
+        g.shutdown()
+
+
+def test_no_coalescing_when_disabled():
+    g = Genesys(GenesysConfig(n_workers=1, coalesce_window_us=0,
+                              coalesce_max=1))
+    try:
+        for _ in range(5):
+            g.call(Sys.CLOCK_GETTIME, 0, blocking=False)
+        g.drain()
+        assert set(g.executor.stats.coalesce_hist) == {1}
+        assert g.executor.stats.bundles == 5
+    finally:
+        g.shutdown()
+
+
+def test_drain_barrier_completes_everything(gsys):
+    """Paper §8.3: the CPU-invoked completion function."""
+    path = tempfile.mktemp()
+    ph = gsys.heap.register_bytes(path.encode())
+    fd = gsys.call(Sys.OPEN, ph, os.O_CREAT | os.O_WRONLY, 0o644)
+    data = gsys.heap.register(np.arange(100, dtype=np.uint8))
+    for i in range(20):
+        gsys.call(Sys.PWRITE64, fd, data, 100, i * 100, blocking=False)
+    gsys.drain()
+    assert os.path.getsize(path) == 2000
+    os.unlink(path)
+
+
+# ----------------------------------------------------- invocation rules -----
+
+def test_kernel_strong_rejected(gsys):
+    with pytest.raises(ValueError, match="deadlock"):
+        gsys.invoke(Sys.CLOCK_GETTIME, pack_args(0),
+                    granularity=Granularity.KERNEL, ordering=Ordering.STRONG)
+
+
+def test_work_item_requires_strong(gsys):
+    with pytest.raises(ValueError, match="implicit strong"):
+        gsys.invoke(Sys.CLOCK_GETTIME, pack_args(0),
+                    granularity=Granularity.WORK_ITEM,
+                    ordering=Ordering.RELAXED_PRODUCER)
+
+
+def test_jit_blocking_consumer_roundtrip(gsys):
+    path = tempfile.mktemp()
+    with open(path, "wb") as f:
+        f.write(b"abcdefgh")
+    ph = gsys.heap.register_bytes(path.encode())
+    fd = gsys.call(Sys.OPEN, ph, os.O_RDONLY, 0)
+    bh = gsys.heap.new_buffer(8)
+
+    def step(x):
+        res = gsys.invoke(Sys.PREAD64, pack_args(fd, bh, 8, 0),
+                          granularity=Granularity.WORK_GROUP,
+                          ordering=Ordering.RELAXED_CONSUMER,
+                          blocking=True, deps=x)
+        return res.tie(x + 1.0), res.ret64()
+
+    y, n = jax.jit(step)(jnp.zeros(3))
+    assert int(n) == 8
+    assert bytes(np.asarray(gsys.heap.resolve(bh)).tobytes()) == b"abcdefgh"
+    np.testing.assert_allclose(y, np.ones(3))
+    os.unlink(path)
+
+
+def test_jit_workitem_batch_one_slot_per_item(gsys):
+    before = gsys.executor.stats.processed
+    args = jnp.stack([pack_args(0)] * 5)
+
+    def step(x):
+        res = gsys.invoke(Sys.CLOCK_GETTIME, args,
+                          granularity=Granularity.WORK_ITEM,
+                          ordering=Ordering.STRONG, blocking=True)
+        return res.ret64()
+
+    out = jax.jit(step)(jnp.zeros(1))
+    assert out.shape == (5,)
+    gsys.drain()
+    assert gsys.executor.stats.processed - before == 5
+
+
+def test_nonblocking_producer_overlaps(gsys):
+    """Non-blocking producer returns before processing completes."""
+    path = tempfile.mktemp()
+    ph = gsys.heap.register_bytes(path.encode())
+    fd = gsys.call(Sys.OPEN, ph, os.O_CREAT | os.O_WRONLY, 0o644)
+    big = gsys.heap.register(np.zeros(1_000_000, dtype=np.uint8))
+
+    def step(x):
+        gsys.invoke(Sys.PWRITE64, pack_args(fd, big, 1_000_000, 0),
+                    granularity=Granularity.KERNEL,
+                    ordering=Ordering.RELAXED_PRODUCER,
+                    blocking=False, deps=x)
+        return x * 2
+
+    jax.jit(step)(jnp.ones(2)).block_until_ready()
+    gsys.drain()
+    assert os.path.getsize(path) == 1_000_000
+    os.unlink(path)
+
+
+# ----------------------------------------------------------- packing --------
+
+@for_all(n_cases=200)
+def test_property_pack64_roundtrip(rng):
+    v = int(rng.integers(-2**62, 2**62))
+    lo, hi = _split64(v)
+    assert np.int32(lo) == lo and np.int32(hi) == hi
+    assert _join64(np.int32(lo), np.int32(hi)) == (v & 0xFFFFFFFFFFFFFFFF)
+
+
+def test_pack_args_shape():
+    a = pack_args(1, 2**40, 3)
+    assert a.shape == (6, 2) and a.dtype == jnp.int32

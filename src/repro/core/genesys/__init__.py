@@ -5,14 +5,45 @@ The public façade is :class:`repro.core.genesys.invoke.Genesys`; semantics
 knobs mirror the paper: invocation granularity (WORK_ITEM / WORK_GROUP /
 KERNEL), ordering (STRONG / RELAXED_PRODUCER / RELAXED_CONSUMER), blocking
 vs non-blocking, and host-side coalescing (window + max batch).
+
+Two CPU-side delivery paths coexist on one `Genesys` instance:
+
+* **doorbell** (paper §5): every call raises an "interrupt" that the
+  dispatcher coalesces into worker bundles. Retvals return through the
+  slot-state handshake (READY -> PROCESSING -> FINISHED), so a blocking
+  caller spins/sleeps on its slot. Choose it for sparse, latency-tolerant
+  calls, or when the caller needs the paper's exact Fig-4 semantics.
+* **genesys.uring** (``uring.py`` / ``completion.py``): io_uring-style
+  shared-memory submission/completion rings. Submissions are SQEs pointing
+  at area slots; a host :class:`~repro.core.genesys.uring.RingPoller`
+  busy-polls (adaptively parking when idle) instead of taking per-call
+  interrupts, and hands whole batches to the same worker pool. Retvals
+  come back as :class:`~repro.core.genesys.completion.Completion` futures
+  and optional CQEs, reapable **out of order** (the paper §8.3
+  weak-ordering + blocking combination), while the area slot itself is
+  recycled immediately. Choose it for high-rate syscall streams (batched
+  reads/writes, serving loops): throughput scales with batch size because
+  per-call cost is two ring operations, not an interrupt + two queue hops.
+
+Ordering guarantees: both paths dispatch bundles to a shared worker pool,
+so cross-call completion order is unspecified unless the caller imposes it
+(Completion futures, `drain()`, or dataflow deps via `invoke`). Within one
+ring bundle (<= ``ring_batch_max`` SQEs) calls execute serially in
+submission order, mirroring the doorbell path's coalesced bundles.
+`Genesys.drain()` is the §8.3 barrier over *both* paths, including SQ
+entries the poller has not yet seen.
 """
 from repro.core.genesys.area import (
     SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,
 )
+from repro.core.genesys.completion import Completion, CompletionQueue
 from repro.core.genesys.executor import Executor, ExecutorStats
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.syscalls import Sys, SyscallTable, make_default_table
+from repro.core.genesys.uring import (
+    RingFull, RingPoller, RingStats, SyscallRing,
+)
 from repro.core.genesys.invoke import (
     Genesys, Granularity, Ordering, GenesysConfig,
 )
@@ -20,7 +51,9 @@ from repro.core.genesys import table
 
 __all__ = [
     "SyscallArea", "SlotState", "SLOT_DTYPE", "SLOT_BYTES",
+    "Completion", "CompletionQueue",
     "Executor", "ExecutorStats", "HostHeap", "MemoryPool",
     "Sys", "SyscallTable", "make_default_table",
+    "RingFull", "RingPoller", "RingStats", "SyscallRing",
     "Genesys", "Granularity", "Ordering", "GenesysConfig", "table",
 ]

@@ -157,6 +157,43 @@ class SyscallArea:
                 if not self._finished.wait(timeout=timeout):
                     raise TimeoutError(f"syscall slot {t.slot} timed out")
 
+    # -- batched device-side API (genesys.uring submission path) --------------
+    def acquire_post_many(self, reqs, hw_id: int = 0) -> list[Ticket]:
+        """Acquire + populate + READY a batch of non-blocking slots under
+        one lock round (the ring submitter's path: per-call cost is the
+        payload write, not a lock/CAS handshake per call).
+
+        ``reqs`` is a list of ``(sysno, args)`` with args a list of ints.
+        Blocks (in chunks) while the area is exhausted, like acquire().
+        """
+        tickets: list[Ticket] = []
+        i = 0
+        ready = int(SlotState.READY)
+        free = int(SlotState.FREE)
+        with self._lock:
+            while i < len(reqs):
+                while not self._free:
+                    self._finished.wait()
+                slot = self._free.pop()
+                rec = self.slots[slot]
+                # hot path: FREE -> POPULATING -> READY inlined (both legal
+                # per Fig 4; the lock makes the pair atomic anyway)
+                if int(rec["state"]) != free:
+                    raise IllegalTransition(f"free-list slot {slot} not FREE")
+                sysno, args = reqs[i]
+                self._gen[slot] += 1
+                rec["hw_id"] = hw_id
+                rec["sysno"] = sysno
+                a = rec["args"]
+                a[:] = 0
+                for j, v in enumerate(args[:6]):
+                    a[j] = v & 0xFFFFFFFFFFFFFFFF
+                rec["flags"] = 0                     # ring slots: non-blocking
+                rec["state"] = ready
+                tickets.append(Ticket(slot=slot, gen=int(self._gen[slot])))
+                i += 1
+        return tickets
+
     # -- CPU-side API (executor) ---------------------------------------------
     def claim_for_processing(self, slot: int) -> bool:
         """READY -> PROCESSING (paper: worker 'atomically switches ready')."""
@@ -176,6 +213,31 @@ class SyscallArea:
                     self._free.append(slot)
             if not ok:
                 raise IllegalTransition(f"slot {slot} not PROCESSING on complete")
+            self._finished.notify_all()
+
+    # -- batched CPU-side API (genesys.uring worker path) ----------------------
+    def claim_many(self, slots) -> None:
+        """READY -> PROCESSING for a whole ring bundle, one lock round."""
+        ready, proc = int(SlotState.READY), int(SlotState.PROCESSING)
+        with self._lock:
+            states = self.slots["state"]
+            for slot in slots:
+                if int(states[slot]) != ready:
+                    raise IllegalTransition(f"ring slot {slot} not READY")
+                states[slot] = proc
+
+    def complete_many(self, slots, retvals) -> None:
+        """Retire a ring bundle: write retvals, PROCESSING -> FREE for all
+        (ring slots are always non-blocking), ONE wakeup for the area."""
+        proc, free = int(SlotState.PROCESSING), int(SlotState.FREE)
+        with self._lock:
+            for slot, ret in zip(slots, retvals):
+                rec = self.slots[slot]
+                rec["args"][0] = int(ret) & 0xFFFFFFFFFFFFFFFF
+                if int(rec["state"]) != proc:
+                    raise IllegalTransition(f"ring slot {slot} not PROCESSING")
+                rec["state"] = free
+                self._free.append(slot)
             self._finished.notify_all()
 
     # -- introspection -------------------------------------------------------

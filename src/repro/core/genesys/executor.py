@@ -11,6 +11,13 @@ Mirrors the paper §5 'CPU-side system call processing':
     which a single worker then processes *serially* (the paper's explicit
     latency/throughput trade-off);
   * the two knobs are the paper's sysfs parameters.
+
+Polling mode (the ``genesys.uring`` path): :meth:`Executor.submit_bundle`
+feeds an already-READY bundle straight onto the worker queue — no doorbell,
+no dispatcher hop, one queue operation per *batch* instead of per call.
+Doorbell and ring requests share the same worker pool, in-flight
+accounting, and :meth:`drain` barrier; each bundle entry may carry a
+completion callback, which is how the ring delivers CQEs.
 """
 from __future__ import annotations
 
@@ -27,7 +34,9 @@ from repro.core.genesys.syscalls import SyscallTable
 class ExecutorStats:
     interrupts: int = 0
     bundles: int = 0
+    ring_bundles: int = 0
     processed: int = 0
+    ring_processed: int = 0
     coalesce_hist: dict = field(default_factory=dict)
     busy_s: float = 0.0
 
@@ -47,6 +56,8 @@ class Executor:
         self.coalesce_window_us = int(coalesce_window_us)
         self.coalesce_max = max(1, int(coalesce_max))
         self.stats = ExecutorStats()
+        # stats are mutated from the dispatcher and every worker thread
+        self._stats_lock = threading.Lock()
         self._doorbell: queue.Queue = queue.Queue()
         self._bundles: queue.Queue = queue.Queue()
         self._stop = threading.Event()
@@ -65,12 +76,36 @@ class Executor:
             w.start()
 
     # -- device side: the interrupt -------------------------------------------
-    def interrupt(self, slot: int) -> None:
-        """Device -> CPU doorbell (paper: s_sendmsg scalar instruction)."""
+    def interrupt(self, slot: int, on_complete=None) -> None:
+        """Device -> CPU doorbell (paper: s_sendmsg scalar instruction).
+        ``on_complete(slot, retval)`` fires after the call is processed —
+        the ring's SQ-full fallback uses it to keep CQE delivery uniform."""
         with self._inflight_lock:
             self._inflight += 1
+        with self._stats_lock:
             self.stats.interrupts += 1
-        self._doorbell.put(slot)
+        self._doorbell.put((slot, on_complete))
+
+    def add_inflight(self, n: int) -> None:
+        """Account ring submissions the moment they land in the SQ, so
+        drain() also covers entries the poller has not popped yet."""
+        with self._inflight_lock:
+            self._inflight += int(n)
+
+    # -- polling mode: the ring's entry point -----------------------------------
+    def submit_bundle(self, bundle, *, counted: bool = False) -> None:
+        """Enqueue a polling-mode bundle directly on the worker pool,
+        bypassing doorbell + dispatcher (one queue op per batch). A bundle
+        is either a list of ``(slot, on_complete)`` pairs or an object with
+        ``process(executor)`` that owns its own accounting (the ring's
+        batch). ``counted=True`` means add_inflight() already ran."""
+        if not len(bundle):
+            return
+        if not counted:
+            self.add_inflight(len(bundle))
+        with self._stats_lock:
+            self.stats.ring_bundles += 1
+        self._bundles.put(bundle)
 
     # -- dispatcher: interrupt handler + coalescing -----------------------------
     def _dispatch_loop(self) -> None:
@@ -90,9 +125,11 @@ class Executor:
                         bundle.append(self._doorbell.get(timeout=remaining))
                     except queue.Empty:
                         break
-            self.stats.bundles += 1
             k = len(bundle)
-            self.stats.coalesce_hist[k] = self.stats.coalesce_hist.get(k, 0) + 1
+            with self._stats_lock:
+                self.stats.bundles += 1
+                self.stats.coalesce_hist[k] = \
+                    self.stats.coalesce_hist.get(k, 0) + 1
             self._bundles.put(bundle)
 
     # -- worker: Linux workqueue task -------------------------------------------
@@ -103,18 +140,31 @@ class Executor:
             except queue.Empty:
                 continue
             t0 = time.monotonic()
-            for slot in bundle:            # serial within bundle (paper §4.2)
-                self._process(slot)
-            self.stats.busy_s += time.monotonic() - t0
+            if hasattr(bundle, "process"):     # polling-mode batch (ring)
+                bundle.process(self)
+            else:
+                for slot, on_complete in bundle:  # serial in bundle (§4.2)
+                    self._process(slot, on_complete)
+            dt = time.monotonic() - t0
+            with self._stats_lock:
+                self.stats.busy_s += dt
 
-    def _process(self, slot: int) -> None:
+    def _process(self, slot: int, on_complete=None) -> None:
         try:
             if not self.area.claim_for_processing(slot):
                 return  # raced / cancelled
             rec = self.area.slots[slot]
-            ret = self.table.dispatch(int(rec["sysno"]), rec["args"])
-            self.area.complete(slot, ret)
-            self.stats.processed += 1
+            try:
+                ret = self.table.dispatch(int(rec["sysno"]), rec["args"])
+            except Exception:            # non-OSError handler failure: the
+                ret = -5                 # caller sees -EIO, the slot and
+            self.area.complete(slot, ret)   # worker thread stay healthy
+            if on_complete is not None:
+                on_complete(slot, ret)
+            with self._stats_lock:
+                self.stats.processed += 1
+                if on_complete is not None:
+                    self.stats.ring_processed += 1
         finally:
             with self._inflight_lock:
                 self._inflight -= 1
@@ -124,7 +174,9 @@ class Executor:
     # -- §8.3: the completion barrier --------------------------------------------
     def drain(self, timeout: float | None = 30.0) -> None:
         """Block until every issued syscall has completed (the paper's new
-        CPU-invoked call that 'ensures all GPU system calls have completed')."""
+        CPU-invoked call that 'ensures all GPU system calls have completed').
+        Covers doorbell interrupts AND ring submissions, including SQ
+        entries the poller has not yet popped."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._inflight_lock:
             while self._inflight > 0:

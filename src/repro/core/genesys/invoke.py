@@ -35,10 +35,12 @@ import numpy as np
 from jax.experimental import io_callback
 
 from repro.core.genesys.area import SyscallArea, Ticket
+from repro.core.genesys.completion import Completion
 from repro.core.genesys.executor import Executor
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.syscalls import SyscallTable, make_default_table
+from repro.core.genesys.uring import SyscallRing
 
 
 class Granularity(Enum):
@@ -59,6 +61,13 @@ class GenesysConfig:
     n_workers: int = 2
     coalesce_window_us: int = 0   # paper sysfs knob 1
     coalesce_max: int = 1         # paper sysfs knob 2
+    # genesys.uring: submission/completion ring knobs (lazy; the poller
+    # thread only starts on first ring use)
+    ring_sq_depth: int = 256
+    ring_cq_depth: int = 1024
+    ring_batch_max: int = 64      # SQEs per executor bundle
+    ring_spin_polls: int = 64     # busy polls before the poller parks
+    ring_max_sleep_s: float = 0.002
 
 
 # ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
@@ -156,6 +165,21 @@ class Genesys:
             coalesce_max=config.coalesce_max,
         )
         self._lock = threading.Lock()
+        self._ring: SyscallRing | None = None
+
+    @property
+    def ring(self) -> SyscallRing:
+        """The genesys.uring submission/completion ring (created on first
+        use; shares the slot area, worker pool, and drain() barrier)."""
+        with self._lock:
+            if self._ring is None:
+                c = self.config
+                self._ring = SyscallRing(
+                    self.area, self.executor,
+                    sq_depth=c.ring_sq_depth, cq_depth=c.ring_cq_depth,
+                    batch_max=c.ring_batch_max, spin_polls=c.ring_spin_polls,
+                    max_sleep_s=c.ring_max_sleep_s)
+            return self._ring
 
     # ------------- host-side path (used by substrates & the executor itself) --
     def call(self, sysno: int, *args, blocking: bool = True,
@@ -183,16 +207,49 @@ class Genesys:
         self.executor.drain()
 
     def shutdown(self) -> None:
+        with self._lock:
+            ring, self._ring = self._ring, None
+        if ring is not None:
+            ring.close()
         self.executor.shutdown()
 
+    # ------------- host-side ring path (genesys.uring) --------------------------
+    def ring_call(self, sysno: int, *args, hw_id: int = 0,
+                  timeout: float | None = None) -> int:
+        """Single syscall through the submission ring; blocks on its
+        Completion future (no doorbell interrupt, no slot spin)."""
+        return self.ring.submit(sysno, *args, hw_id=hw_id).result(
+            timeout=timeout)
+
+    def ring_submit(self, calls, *, want_cqe: bool = False, hw_id: int = 0
+                    ) -> list[Completion]:
+        """Multi-entry submission: ``calls`` is a list of ``(sysno, *args)``
+        tuples; returns one Completion per call (reapable out of order)."""
+        return self.ring.submit_many(calls, want_cqe=want_cqe, hw_id=hw_id)
+
+    def ring_reap(self, max_n: int = 64, timeout: float | None = None
+                  ) -> list[tuple[int, int]]:
+        """Drain up to ``max_n`` (user_data, retval) CQEs in completion
+        order (only calls submitted with ``want_cqe=True`` post CQEs)."""
+        return self.ring.reap(max_n, timeout=timeout)
+
     # ------------- device-side path (inside jit) --------------------------------
-    def _host_entry(self, blocking: bool, sysno_np, args_np, hw_np):
-        """io_callback target: post slot(s), ring doorbell, maybe wait."""
+    def _host_entry(self, blocking: bool, via_ring: bool,
+                    sysno_np, args_np, hw_np):
+        """io_callback target: post slot(s), ring doorbell or SQ, maybe wait."""
         sysno = int(np.asarray(sysno_np).reshape(()))
         hw = int(np.asarray(hw_np).reshape(()))
         a = np.asarray(args_np)
         batched = a.ndim == 3
         rows = a if batched else a[None]
+        if via_ring:
+            comps = self.ring.submit_many(
+                [(sysno, *_np_join(r)) for r in rows], hw_id=hw)
+            if not blocking:
+                return np.zeros((len(rows), 2) if batched else (2,), np.int32)
+            rets = np.array([_split64(c.result()) for c in comps],
+                            dtype=np.int32)
+            return rets if batched else rets[0]
         tickets = []
         for r in rows:
             t = self.area.acquire(hw)
@@ -209,11 +266,16 @@ class Genesys:
                granularity: Granularity = Granularity.WORK_GROUP,
                ordering: Ordering = Ordering.STRONG,
                blocking: bool = True,
-               deps=None, hw_id=0) -> InvokeResult:
+               deps=None, hw_id=0, via_ring: bool = False) -> InvokeResult:
         """Invoke a system call from inside a jitted computation.
 
         ``args``: [6,2] int32 from :func:`pack_args` (or [n,6,2] for
         WORK_ITEM batches — one slot per row).
+
+        ``via_ring=True`` routes the call through the genesys.uring
+        submission ring instead of the doorbell-interrupt path: batched
+        WORK_ITEM rows become one multi-entry submission, and blocking
+        results are reaped out of order via Completion futures.
         """
         if granularity == Granularity.WORK_ITEM and ordering != Ordering.STRONG:
             raise ValueError(
@@ -237,7 +299,7 @@ class Genesys:
         out_shape = jax.ShapeDtypeStruct((n, 2) if batched else (2,), jnp.int32)
         ordered = (granularity == Granularity.WORK_ITEM)  # CPU-thread-like
         ret = io_callback(
-            partial(self._host_entry, blocking),
+            partial(self._host_entry, blocking, via_ring),
             out_shape,
             jnp.asarray(int(sysno), jnp.int32),
             args,

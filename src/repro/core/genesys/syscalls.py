@@ -41,7 +41,14 @@ class Sys(IntEnum):
     GETRUSAGE = 98
     # GENESYS extensions (paper §8.1 class-2: adapted semantics)
     CLOCK_GETTIME = 228
+    # pure-overhead call (returns arg0): the echo microbenchmark floor for
+    # the doorbell-vs-ring studies (benchmarks/fig8_uring.py)
+    ECHO = 1000
 
+
+# dispatch() is on every worker's hot path: resolve names without a per-call
+# enum construction (and never rebuild the membership set per call)
+_SYS_NAMES = {int(s): s.name for s in Sys}
 
 Handler = Callable[..., int]
 
@@ -56,18 +63,25 @@ class SyscallTable:
         self._fd_lock = threading.Lock()
         self._sockets: dict[int, socket.socket] = {}
         self.stats: dict[str, int] = {}
+        self._stats_lock = threading.Lock()   # dispatch runs on all workers
 
     def register(self, no: int, fn: Handler) -> None:
         self._handlers[int(no)] = fn
 
     def dispatch(self, sysno: int, args) -> int:
-        fn = self._handlers.get(int(sysno))
+        sysno = int(sysno)
+        fn = self._handlers.get(sysno)
         if fn is None:
             return -38  # -ENOSYS
-        name = Sys(sysno).name if sysno in set(int(s) for s in Sys) else str(sysno)
-        self.stats[name] = self.stats.get(name, 0) + 1
+        name = _SYS_NAMES.get(sysno) or str(sysno)
+        with self._stats_lock:
+            self.stats[name] = self.stats.get(name, 0) + 1
+        if isinstance(args, np.ndarray):
+            args = args.tolist()        # one C-level conversion, not 6 int()s
+        else:
+            args = [int(a) for a in args]
         try:
-            return int(fn(*[int(a) for a in args]))
+            return int(fn(*args))
         except OSError as e:
             return -int(e.errno or 5)
 
@@ -157,6 +171,9 @@ class SyscallTable:
         import time
         return int(time.monotonic_ns() // 1000)  # usec
 
+    def _sys_echo(self, a0, *_):
+        return a0
+
 
 def make_default_table(heap: HostHeap | None = None,
                        pool: MemoryPool | None = None) -> SyscallTable:
@@ -178,4 +195,5 @@ def make_default_table(heap: HostHeap | None = None,
     t.register(Sys.MADVISE, t._sys_madvise)
     t.register(Sys.GETRUSAGE, t._sys_getrusage)
     t.register(Sys.CLOCK_GETTIME, t._sys_clock_gettime)
+    t.register(Sys.ECHO, t._sys_echo)
     return t

@@ -1,0 +1,398 @@
+"""genesys.uring: shared-memory submission/completion rings for
+interrupt-free GPU syscalls.
+
+The paper's CPU path (§5) takes a doorbell interrupt per syscall and turns
+it into a work-queue task; §6 measures the latency/throughput trade-off of
+coalescing those interrupts. This module is the io_uring-shaped answer to
+the same bottleneck: the device posts submission-queue entries (SQEs) into
+a fixed-capacity shared-memory ring, and a host-side :class:`RingPoller`
+discovers them by polling — no per-call doorbell, no per-call queue hop.
+
+Layout (mirrors io_uring, adapted to the GENESYS slot area):
+
+  * the *payload* of each call still lives in a 64-byte
+    :class:`~repro.core.genesys.area.SyscallArea` slot (sysno, six u64
+    args) — the SQE is just ``(slot index, user_data, flags)``, like
+    io_uring SQEs referencing registered buffers;
+  * SQ: fixed-capacity ring of SQEs with monotonically increasing
+    head/tail, so wraparound is index arithmetic, never data movement;
+  * CQ: see :mod:`repro.core.genesys.completion` — per-call
+    :class:`Completion` futures (out-of-order reap of weak-ordered
+    blocking calls, paper §8.3) plus an optional CQE ring;
+  * SQ-full backpressure (``sq_full=``): ``"spin"`` busy-waits for space
+    and falls back to the doorbell path if the wait blows its bound;
+    ``"doorbell"`` falls back immediately; ``"raise"`` demands the whole
+    batch fit up front and raises :class:`RingFull` otherwise;
+  * the poller adaptively sleeps when the SQ stays empty, using the
+    io_uring SQPOLL ``need_wakeup`` protocol: it parks on an event and
+    submitters deliver exactly one wakeup on the empty->nonempty edge
+    (an edge-triggered interrupt per *idle period*, not per call).
+
+Why the ring is fast: every per-call lock/CAS/notify of the doorbell path
+is batched to once per bundle. Submission acquires+populates all slots in
+one area-lock round and publishes SQEs in one SQ-lock round; the worker
+claims, dispatches, retires, and resolves a whole bundle with one lock
+round per structure (area, completion registry, CQ) and ONE condition
+wakeup. Per-call cost collapses to the payload write + handler dispatch.
+
+Ring submissions always use non-blocking area slots: the slot recycles the
+moment the handler returns (PROCESSING -> FREE) and the return value
+travels in the Completion/CQE. Nothing ever spins on slot state, which is
+why the ring path needs neither interrupts nor the FINISHED handshake.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+
+from repro.core.genesys.area import SyscallArea
+from repro.core.genesys.completion import Completion, CompletionQueue
+from repro.core.genesys.executor import Executor
+
+SQE_WANT_CQE = 0x1     # post a CQE to the CQ ring (besides the future)
+
+
+class RingFull(RuntimeError):
+    """SQ has no free entries and the chosen backpressure policy gave up."""
+
+
+@dataclass
+class RingStats:
+    submitted: int = 0          # SQEs that entered the SQ
+    fallback_doorbell: int = 0  # SQ-full submissions routed via interrupt
+    sq_full_spins: int = 0      # times a submitter had to spin for space
+    bundles: int = 0            # batches handed to the executor
+    polls: int = 0              # non-empty SQ polls
+    empty_polls: int = 0
+    wakeups: int = 0            # times the parked poller was woken
+    batch_hist: dict = field(default_factory=dict)
+
+    def mean_batch(self) -> float:
+        n = sum(self.batch_hist.values())
+        if not n:
+            return 0.0
+        return sum(k * v for k, v in self.batch_hist.items()) / n
+
+
+class _RingBatch:
+    """A popped bundle of SQEs; the executor worker runs :meth:`process`.
+
+    Implements the executor's polling-mode bundle protocol (any object
+    with a ``process(executor)`` method): claim all slots, dispatch each
+    call serially (submission order within the bundle), retire all slots,
+    resolve all futures, post all CQEs — one lock round per structure.
+    """
+
+    __slots__ = ("ring", "entries")
+
+    def __init__(self, ring: SyscallRing, entries):
+        self.ring = ring
+        self.entries = entries           # list of (slot, user_data, flags)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def process(self, ex: Executor) -> None:
+        ring = self.ring
+        area, table = ex.area, ex.table
+        slots = [e[0] for e in self.entries]
+        n = len(slots)
+        try:
+            area.claim_many(slots)
+            recs = area.slots
+            rets = []
+            for slot in slots:
+                rec = recs[slot]
+                try:
+                    ret = table.dispatch(rec["sysno"], rec["args"])
+                except Exception:        # handler blew past dispatch's
+                    ret = -5             # OSError net: surface -EIO, keep
+                rets.append(ret)         # the worker and the bundle alive
+            area.complete_many(slots, rets)
+            ring._complete_batch(self.entries, rets)
+            with ex._stats_lock:
+                ex.stats.processed += n
+                ex.stats.ring_processed += n
+        finally:
+            # mirror _process(): in-flight accounting survives any failure,
+            # so drain()/shutdown() can never hang on a dead bundle
+            with ex._inflight_lock:
+                ex._inflight -= n
+                if ex._inflight == 0:
+                    ex._idle.notify_all()
+
+
+class SyscallRing:
+    """Submission/completion rings over a :class:`SyscallArea` + executor.
+
+    ``sq_depth`` bounds in-flight-but-unpolled submissions;
+    ``batch_max`` bounds how many SQEs one poll turns into one executor
+    bundle (the ring-path analogue of the paper's ``coalesce_max``).
+    """
+
+    def __init__(self, area: SyscallArea, executor: Executor, *,
+                 sq_depth: int = 256, cq_depth: int = 1024,
+                 batch_max: int = 64, spin_polls: int = 64,
+                 max_sleep_s: float = 0.002, start_poller: bool = True):
+        self.area = area
+        self.executor = executor
+        self.sq_depth = int(sq_depth)
+        self.batch_max = max(1, int(batch_max))
+        self.cq = CompletionQueue(cq_depth)
+        self.stats = RingStats()
+        # SQ ring: slot index + user_data + flags per entry ("shared memory")
+        self._sq_slot = np.full(self.sq_depth, -1, dtype=np.int64)
+        self._sq_ud = np.zeros(self.sq_depth, dtype=np.int64)
+        self._sq_flags = np.zeros(self.sq_depth, dtype=np.uint32)
+        self._sq_head = 0           # consumer (poller), monotonic
+        self._sq_tail = 0           # producer (device side), monotonic
+        self._sq_lock = threading.Lock()
+        # SQPOLL-style wakeup protocol
+        self._need_wakeup = False
+        self._wakeup = threading.Event()
+        # completion registry; all futures share one condition (see
+        # completion.py throughput note)
+        self._next_ud = 1
+        self._completions: dict[int, Completion] = {}
+        self._comp_lock = threading.Lock()
+        self._comp_cond = threading.Condition()
+        self._stats_lock = threading.Lock()   # submitter-side counters
+        self.poller = RingPoller(self, spin_polls=spin_polls,
+                                 max_sleep_s=max_sleep_s)
+        if start_poller:
+            self.poller.start()
+
+    # -- submission (device side) ---------------------------------------------
+    def submit_many(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
+                    sq_full: str = "spin", spin_timeout_s: float = 5.0
+                    ) -> list[Completion]:
+        """Post a batch of ``(sysno, *args)`` calls; returns one
+        :class:`Completion` per call, in submission order.
+
+        ``sq_full`` picks the backpressure policy when the SQ lacks space:
+        ``"spin"`` (bounded busy-wait, then doorbell fallback), ``"doorbell"``
+        (immediate fallback to the interrupt path — calls still complete
+        through the same futures/CQ), or ``"raise"`` (:class:`RingFull`
+        unless the whole batch fits up front; nothing is submitted).
+        """
+        n = len(calls)
+        if n == 0:
+            return []
+        if sq_full == "raise" and self.sq_space() < n:
+            raise RingFull(
+                f"SQ has {self.sq_space()}/{self.sq_depth} free, need {n}")
+        flags = SQE_WANT_CQE if want_cqe else 0
+        reqs = [(int(c[0]), [int(a) for a in c[1:]]) for c in calls]
+        comps: list[Completion] = []
+        # chunk acquire->publish so a huge batch never sits on unpublished
+        # (hence unprocessable) slots while waiting for the area to free —
+        # acquiring the whole area up front would deadlock against itself
+        chunk = max(1, min(self.sq_depth, self.area.n_slots // 2))
+        for lo in range(0, n, chunk):
+            part = reqs[lo:lo + chunk]
+            tickets = self.area.acquire_post_many(part, hw_id=hw_id)
+            with self._comp_lock:
+                ud0 = self._next_ud
+                self._next_ud += len(part)
+                cs = [Completion(ud0 + i, part[i][0], self._comp_cond)
+                      for i in range(len(part))]
+                for c in cs:
+                    self._completions[c.user_data] = c
+            entries = [(t.slot, ud0 + i, flags)
+                       for i, t in enumerate(tickets)]
+            self._publish(entries, sq_full, spin_timeout_s)
+            comps += cs
+        return comps
+
+    def submit(self, sysno, *args, want_cqe: bool = False, hw_id: int = 0
+               ) -> Completion:
+        return self.submit_many([(sysno, *args)], want_cqe=want_cqe,
+                                hw_id=hw_id)[0]
+
+    def _publish(self, entries, sq_full: str, spin_timeout_s: float) -> None:
+        """Move entries into the SQ (bulk), applying backpressure policy."""
+        i = 0
+        n = len(entries)
+        deadline = None
+        while i < n:
+            i += self._sq_push_bulk(entries[i:])
+            if i >= n:
+                return
+            if sq_full == "doorbell":
+                break
+            # spin: bounded busy-wait for the poller to free SQ space
+            if deadline is None:
+                with self._stats_lock:
+                    self.stats.sq_full_spins += 1
+                deadline = time.monotonic() + spin_timeout_s
+            if time.monotonic() > deadline:
+                break                  # blew the bound -> doorbell fallback
+            time.sleep(0)              # yield the GIL to the poller/workers
+        if i < len(entries):
+            with self._stats_lock:
+                self.stats.fallback_doorbell += len(entries) - i
+            for slot, ud, fl in entries[i:]:
+                self.executor.interrupt(
+                    slot, partial(self._complete, ud, bool(fl & SQE_WANT_CQE)))
+
+    def _sq_push_bulk(self, entries) -> int:
+        """Publish as many SQEs as fit, one lock round. Returns count."""
+        wake = False
+        with self._sq_lock:
+            k = min(len(entries),
+                    self.sq_depth - (self._sq_tail - self._sq_head))
+            for i in range(k):
+                idx = (self._sq_tail + i) % self.sq_depth
+                slot, ud, fl = entries[i]
+                self._sq_slot[idx] = slot
+                self._sq_ud[idx] = ud
+                self._sq_flags[idx] = fl
+            if k:
+                self._sq_tail += k
+                # in-flight from the instant they are visible in the SQ,
+                # so drain() covers entries the poller has not seen yet
+                self.executor.add_inflight(k)
+                self.stats.submitted += k
+                if self._need_wakeup:
+                    self._need_wakeup = False
+                    wake = True
+        if wake:
+            self._wakeup.set()
+        return k
+
+    # -- polling (host side) ---------------------------------------------------
+    def process_pending(self, max_n: int | None = None) -> int:
+        """Pop up to ``max_n`` SQEs and hand them to the executor as one
+        bundle. Returns how many were popped. (The poller's unit of work;
+        also callable directly, e.g. from tests or a caller-owned loop.)"""
+        max_n = self.batch_max if max_n is None else int(max_n)
+        with self._sq_lock:
+            n = min(max_n, self._sq_tail - self._sq_head)
+            if n == 0:
+                return 0
+            entries = []
+            for i in range(n):
+                idx = (self._sq_head + i) % self.sq_depth
+                entries.append((int(self._sq_slot[idx]),
+                                int(self._sq_ud[idx]),
+                                int(self._sq_flags[idx])))
+                self._sq_slot[idx] = -1
+            self._sq_head += n
+        with self._stats_lock:
+            self.stats.polls += 1
+            self.stats.bundles += 1
+            self.stats.batch_hist[n] = self.stats.batch_hist.get(n, 0) + 1
+        self.executor.submit_bundle(_RingBatch(self, entries), counted=True)
+        return n
+
+    # -- completion plumbing ---------------------------------------------------
+    def _complete_batch(self, entries, rets) -> None:
+        """Worker side: resolve a bundle's futures (one registry lock round,
+        one condition wakeup) and post its CQEs (one CQ lock round)."""
+        with self._comp_lock:
+            comps = [self._completions.pop(ud, None) for _, ud, _ in entries]
+        for c, ret in zip(comps, rets):
+            if c is not None:
+                c.set_result(ret, notify=False)
+        with self._comp_cond:
+            self._comp_cond.notify_all()
+        cqes = [(ud, ret) for (_, ud, fl), ret in zip(entries, rets)
+                if fl & SQE_WANT_CQE]
+        self.cq.push_many(cqes)
+
+    def _complete(self, ud: int, want_cqe: bool, slot: int, retval: int
+                  ) -> None:
+        """Per-call completion callback (doorbell-fallback path only)."""
+        with self._comp_lock:
+            comp = self._completions.pop(ud, None)
+        if comp is not None:
+            comp.set_result(retval)
+        if want_cqe:
+            self.cq.push(ud, retval)
+
+    # -- reaping ---------------------------------------------------------------
+    def reap(self, max_n: int = 64, timeout: float | None = None
+             ) -> list[tuple[int, int]]:
+        """Drain up to ``max_n`` CQEs (completion order — out-of-order
+        relative to submission)."""
+        return self.cq.reap(max_n, timeout=timeout)
+
+    def sq_space(self) -> int:
+        with self._sq_lock:
+            return self.sq_depth - (self._sq_tail - self._sq_head)
+
+    def close(self) -> None:
+        """Stop the poller, then flush any SQEs it never saw onto the
+        worker pool — submissions racing with close() still complete, and
+        a subsequent executor drain()/shutdown() cannot hang on in-flight
+        counts for entries nobody would ever pop."""
+        self.poller.stop()
+        while self.process_pending():
+            pass
+
+
+class RingPoller:
+    """Host-side poller: busy-polls the SQ, adaptively parks when idle.
+
+    Replaces the paper's doorbell interrupt + top-half handler: discovery
+    of new work is a memory poll, batching falls out of draining whatever
+    accumulated since the last poll (cf. §6 coalescing, without the
+    per-interrupt cost), and the only event-like signalling left is one
+    edge-triggered wakeup per idle period (io_uring SQPOLL semantics).
+    """
+
+    def __init__(self, ring: SyscallRing, *, spin_polls: int = 64,
+                 max_sleep_s: float = 0.002):
+        self.ring = ring
+        self.spin_polls = max(1, int(spin_polls))
+        self.max_sleep_s = float(max_sleep_s)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(target=self._loop,
+                                        name="genesys-uring-poll", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        ring = self.ring
+        idle = 0
+        while not self._stop.is_set():
+            if ring.process_pending() > 0:
+                idle = 0
+                continue
+            ring.stats.empty_polls += 1
+            idle += 1
+            if idle < self.spin_polls:
+                time.sleep(0)          # busy-poll phase: just yield the GIL
+                continue
+            # adaptive sleep: park until a submitter's edge wakeup (or a
+            # bounded timeout, so shutdown and races stay safe)
+            ring._wakeup.clear()
+            with ring._sq_lock:
+                if ring._sq_tail != ring._sq_head:
+                    continue           # raced: work arrived before parking
+                ring._need_wakeup = True
+            if ring._wakeup.wait(timeout=self.max_sleep_s):
+                ring.stats.wakeups += 1
+            with ring._sq_lock:
+                ring._need_wakeup = False
+            idle = 0
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._wake()
+        if self._thread is not None:
+            self._thread.join(timeout=2)
+            self._thread = None
+
+    def _wake(self) -> None:
+        with self.ring._sq_lock:
+            self.ring._need_wakeup = False
+        self.ring._wakeup.set()

@@ -5,6 +5,11 @@ paper §4.1's "prefetch data using read system calls but may not use the
 results immediately" example) several batches ahead, then blocks only on
 the ticket of the batch actually consumed. Straggler mitigation re-issues
 a read that misses its deadline (redundant read, first-completion-wins).
+
+``use_ring=True`` prefetches through the genesys.uring submission ring
+instead: each pread is an SQE whose Completion future is the per-batch
+wait handle — no doorbell interrupt, no FINISHED-slot parking, and the
+slot area never holds slots hostage for in-flight prefetches.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import numpy as np
 
 from repro.core.genesys import Genesys, Sys
 from repro.core.genesys.area import Ticket
+from repro.core.genesys.completion import Completion
 
 
 def write_token_shard(path: str, tokens: np.ndarray) -> None:
@@ -29,6 +35,8 @@ class _Pending:
     issued_at: float
     offset: int
     nbytes: int
+    fd: int = -1
+    completion: Completion | None = None
 
 
 class GenesysDataLoader:
@@ -40,8 +48,10 @@ class GenesysDataLoader:
 
     def __init__(self, gsys: Genesys, paths: list[str], *, batch: int,
                  seq: int, prefetch_depth: int = 2,
-                 straggler_deadline_s: float = 2.0, seed: int = 0):
+                 straggler_deadline_s: float = 2.0, seed: int = 0,
+                 use_ring: bool = False):
         self.gsys = gsys
+        self.use_ring = use_ring
         self.paths = list(paths)
         self.batch = batch
         self.seq = seq
@@ -72,14 +82,25 @@ class GenesysDataLoader:
         max_off = max(1, self._sizes[f] - n)
         offset = int(self.rng.integers(0, max_off)) // 4 * 4
         bh = self.gsys.heap.new_buffer(n)
-        # blocking slot with DEFERRED wait: weak ordering + blocking in the
-        # paper's taxonomy — the result is eventually consumed, so the slot
-        # must hold FINISHED until we poll it (non-blocking slots retire
-        # immediately and cannot deliver data ownership).
-        t = self.gsys.call_async(Sys.PREAD64, self._fds[f], bh, n, offset)
-        self._pending.append(_Pending(ticket=t, buf_handle=bh,
-                                      issued_at=time.monotonic(),
-                                      offset=offset, nbytes=n))
+        if self.use_ring:
+            # ring path: the Completion future is the wait handle, so the
+            # slot retires immediately and data ownership rides the CQE
+            c = self.gsys.ring_submit(
+                [(Sys.PREAD64, self._fds[f], bh, n, offset)])[0]
+            self._pending.append(_Pending(ticket=None, buf_handle=bh,
+                                          issued_at=time.monotonic(),
+                                          offset=offset, nbytes=n,
+                                          fd=self._fds[f], completion=c))
+        else:
+            # blocking slot with DEFERRED wait: weak ordering + blocking in
+            # the paper's taxonomy — the result is eventually consumed, so
+            # the slot must hold FINISHED until we poll it (non-blocking
+            # slots retire immediately and cannot deliver data ownership).
+            t = self.gsys.call_async(Sys.PREAD64, self._fds[f], bh, n, offset)
+            self._pending.append(_Pending(ticket=t, buf_handle=bh,
+                                          issued_at=time.monotonic(),
+                                          offset=offset, nbytes=n,
+                                          fd=self._fds[f]))
         self._cursor += 1
         self.stats["reads"] += 1
 
@@ -87,18 +108,24 @@ class GenesysDataLoader:
         t0 = time.monotonic()
         timed_out = False
         try:
-            self.gsys.wait(p.ticket, timeout=self.deadline)
+            if p.completion is not None:
+                p.completion.result(timeout=self.deadline)
+            else:
+                self.gsys.wait(p.ticket, timeout=self.deadline)
         except TimeoutError:
             timed_out = True
         # straggler mitigation: if the WAIT blew the deadline, re-issue the
         # read synchronously (redundant read, first completion wins)
         if timed_out or time.monotonic() - t0 > self.deadline:
             self.stats["straggler_reissues"] += 1
-            self.gsys.call(Sys.PREAD64, self._fds[0], p.buf_handle,
+            self.gsys.call(Sys.PREAD64, p.fd, p.buf_handle,
                            p.nbytes, p.offset, blocking=True)
         buf = np.asarray(self.gsys.heap.resolve(p.buf_handle))
         self.stats["bytes"] += p.nbytes
         arr = buf.view(np.uint32).reshape(self.batch, self.seq + 1)
+        # safe even if a straggling original read is still queued: handles
+        # are never reused, so its late dispatch resolves to a dead handle
+        # and returns -EIO instead of touching anyone else's buffer
         self.gsys.heap.release(p.buf_handle)
         return arr
 

@@ -8,6 +8,11 @@ Two paths, mirroring the paper's comparison:
     its echo server);
   * CPU baseline: a classic host loop that owns the socket and babysits the
     accelerator (Fig 1 left).
+
+``use_ring=True`` swaps the doorbell-interrupt syscall path for the
+genesys.uring rings: receives are ring calls (Completion-future blocking),
+and each reply batch goes out as ONE multi-entry submission whose sends
+complete asynchronously — drain() is the only barrier.
 """
 from __future__ import annotations
 
@@ -34,14 +39,17 @@ class GenesysUdpServer:
     """Echo/decode server whose network I/O is GENESYS syscalls."""
 
     def __init__(self, gsys: Genesys, *, port: int, max_batch: int = 8,
-                 batch_window_s: float = 0.005, payload: int = 4096):
+                 batch_window_s: float = 0.005, payload: int = 4096,
+                 use_ring: bool = False):
         self.gsys = gsys
         self.port = port
         self.max_batch = max_batch
         self.window = batch_window_s
         self.payload = payload
-        self.fd = gsys.call(Sys.SOCKET, socket.AF_INET, socket.SOCK_DGRAM, 0)
-        gsys.call(Sys.BIND, self.fd, port)
+        self.use_ring = use_ring
+        self._call = gsys.ring_call if use_ring else gsys.call
+        self.fd = self._call(Sys.SOCKET, socket.AF_INET, socket.SOCK_DGRAM, 0)
+        self._call(Sys.BIND, self.fd, port)
         sock = gsys.table._sockets[self.fd]
         sock.settimeout(0.2)
         self.stats = ServeStats()
@@ -58,7 +66,7 @@ class GenesysUdpServer:
         try:
             while len(out) < self.max_batch:
                 bh = self.gsys.heap.new_buffer(self.payload)
-                n = self.gsys.call(Sys.RECVFROM, self.fd, bh, self.payload)
+                n = self._call(Sys.RECVFROM, self.fd, bh, self.payload)
                 if n > 0:
                     out.append(np.asarray(
                         self.gsys.heap.resolve(bh))[:n].copy())
@@ -74,6 +82,17 @@ class GenesysUdpServer:
         return out
 
     def reply(self, payloads: list[bytes], port: int) -> None:
+        if self.use_ring:
+            # ring fast path: the whole reply batch is one multi-entry
+            # submission; sends complete out of band, drain() is the barrier
+            calls = []
+            for p in payloads:
+                bh = self.gsys.heap.register(
+                    np.frombuffer(p, dtype=np.uint8).copy())
+                self._pending_handles.append(bh)
+                calls.append((Sys.SENDTO, self.fd, bh, len(p), port))
+            self.gsys.ring_submit(calls)
+            return
         for p in payloads:
             bh = self.gsys.heap.register(
                 np.frombuffer(p, dtype=np.uint8).copy())
@@ -142,7 +161,7 @@ class GenesysUdpServer:
         return self.stats
 
     def close(self) -> None:
-        self.gsys.call(Sys.CLOSE, self.fd)
+        self._call(Sys.CLOSE, self.fd)
 
 
 def cache_batch_size(cache) -> int:

@@ -9,8 +9,8 @@ sys.path.insert(0, str(Path(__file__).parent))  # proptest helper
 
 @pytest.fixture(scope="session")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import mesh_axis_kwargs
+    return jax.make_mesh((1, 1), ("data", "model"), **mesh_axis_kwargs(2))
 
 
 @pytest.fixture()

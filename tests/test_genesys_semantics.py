@@ -139,6 +139,64 @@ def test_property_pack64_roundtrip(rng):
     assert _join64(np.int32(lo), np.int32(hi)) == (v & 0xFFFFFFFFFFFFFFFF)
 
 
+@for_all(n_cases=300)
+def test_property_pack64_full_u64_range(rng):
+    """Full-width bit patterns: any u64 value survives split->join, and the
+    split halves are always valid signed-int32 bit patterns."""
+    v = int(rng.integers(0, 2**64, dtype=np.uint64))
+    lo, hi = _split64(v)
+    assert -(2**31) <= lo < 2**31 and -(2**31) <= hi < 2**31
+    assert _join64(lo, hi) == v
+
+
+@for_all(n_cases=200)
+def test_property_pack64_negative_values(rng):
+    """Negatives map to their two's-complement u64 image (how errno-style
+    retvals travel) and the image joins back exactly."""
+    v = -int(rng.integers(1, 2**63))
+    lo, hi = _split64(v)
+    assert _join64(lo, hi) == v + 2**64
+    # the same holds when the words travel as numpy int32 (the jit path)
+    assert _join64(np.int32(lo), np.int32(hi)) == v + 2**64
+
+
+def test_pack64_edge_patterns():
+    for v in (0, 1, -1, 2**31 - 1, 2**31, 2**32 - 1, 2**32, 2**63 - 1,
+              -2**63, 2**64 - 1, 0xDEADBEEF_CAFEBABE, 0x80000000_80000000):
+        lo, hi = _split64(v)
+        assert _join64(lo, hi) == (v & 0xFFFFFFFFFFFFFFFF), hex(v)
+
+
 def test_pack_args_shape():
     a = pack_args(1, 2**40, 3)
     assert a.shape == (6, 2) and a.dtype == jnp.int32
+
+
+def test_pack_args_values_roundtrip():
+    vals = (7, 2**40 + 13, -1, 0, 2**33)
+    a = np.asarray(pack_args(*vals))
+    for i, v in enumerate(vals):
+        assert _join64(a[i, 0], a[i, 1]) == (v & 0xFFFFFFFFFFFFFFFF)
+    # unused arg rows are zero
+    assert (a[len(vals):] == 0).all()
+
+
+def test_pack_args_batched_shapes():
+    """WORK_ITEM batches stack to [n, 6, 2] and each row round-trips."""
+    batch = jnp.stack([pack_args(i, 2**35 + i, -i) for i in range(5)])
+    assert batch.shape == (5, 6, 2) and batch.dtype == jnp.int32
+    b = np.asarray(batch)
+    for i in range(5):
+        assert _join64(b[i, 0, 0], b[i, 0, 1]) == i
+        assert _join64(b[i, 1, 0], b[i, 1, 1]) == 2**35 + i
+        assert _join64(b[i, 2, 0], b[i, 2, 1]) == (-i & 0xFFFFFFFFFFFFFFFF)
+
+
+def test_pack_args_traced_scalar():
+    """Traced int32 scalars pack into the lo word under jit."""
+    def f(x):
+        return pack_args(x, 3)
+
+    out = np.asarray(jax.jit(f)(jnp.asarray(41, jnp.int32)))
+    assert out[0, 0] == 41 and out[0, 1] == 0
+    assert _join64(out[1, 0], out[1, 1]) == 3

@@ -34,9 +34,11 @@ def test_end_to_end_training_with_genesys_services(gsys, tmp_path, mesh11):
     cm = CheckpointManager(gsys, str(tmp_path / "ckpt"), keep=2)
     with mesh11:
         tr = Trainer(gsys, jax.jit(ts), params, opt.init(params), loader,
-                     ckpt=cm, ckpt_every=4)
-        st = tr.run(8)
-        assert st.steps == 8 and st.ckpts == 2
+                     ckpt=cm, ckpt_every=16)
+        # 32 steps: enough for the learning signal (unigram stats of the
+        # random stream) to beat per-batch sampling noise on this setup
+        st = tr.run(32)
+        assert st.steps == 32 and st.ckpts == 2
         assert all(np.isfinite(l) for l in st.losses)
         assert np.mean(st.losses[-3:]) < np.mean(st.losses[:3])
 
@@ -44,7 +46,7 @@ def test_end_to_end_training_with_genesys_services(gsys, tmp_path, mesh11):
         tr2 = Trainer(gsys, jax.jit(ts), params, opt.init(params), loader,
                       ckpt=cm)
         assert tr2.resume()
-        assert tr2.step == 8
+        assert tr2.step == 32
         st2 = tr2.run(2)
         assert all(np.isfinite(l) for l in st2.losses)
     loader.close()
@@ -146,15 +148,20 @@ def test_compressed_crosspod_reduce_multidevice():
         "'--xla_force_host_platform_device_count=8'\n"
         "import jax, jax.numpy as jnp, numpy as np\n"
         "from jax.sharding import PartitionSpec as P\n"
+        "from repro.launch.mesh import mesh_axis_kwargs\n"
         "from repro.optim.compression import compress_tree, decompress_tree\n"
+        "try:\n"
+        "    shard_map = jax.shard_map\n"
+        "except AttributeError:\n"
+        "    from jax.experimental.shard_map import shard_map\n"
         "mesh = jax.make_mesh((2, 4), ('pod', 'data'),\n"
-        "    axis_types=(jax.sharding.AxisType.Auto,)*2)\n"
+        "    **mesh_axis_kwargs(2))\n"
         "def reduce_fn(g):\n"
         "    payload, _ = compress_tree({'g': g}, 'bf16')\n"
         "    summed = jax.lax.psum(payload['g'], ('pod', 'data'))\n"
         "    return decompress_tree({'g': summed}, 'bf16')['g']\n"
         "g = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64) / 100\n"
-        "out = jax.jit(jax.shard_map(reduce_fn, mesh=mesh,\n"
+        "out = jax.jit(shard_map(reduce_fn, mesh=mesh,\n"
         "    in_specs=P(('pod', 'data')), out_specs=P(('pod', 'data'))))(g)\n"
         "ref = jnp.broadcast_to(g.sum(0, keepdims=True), g.shape)\n"
         "err = float(jnp.max(jnp.abs(out - ref)))\n"

@@ -1,0 +1,289 @@
+"""genesys.uring: SQ wraparound, SQ-full backpressure, out-of-order reap,
+drain() over in-flight ring entries, doorbell/ring interop, and the
+ring-based serving/data fast paths."""
+import os
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.genesys import (Genesys, GenesysConfig, Granularity, Ordering,
+                                RingFull, Sys, SyscallRing)
+from repro.core.genesys.invoke import pack_args
+
+SLEEP_SYS = 900         # test-only syscall: sleep args[0] microseconds
+
+
+def _register_sleep(g: Genesys) -> None:
+    def _sleep(us, *_):
+        time.sleep(us / 1e6)
+        return us
+    g.table.register(SLEEP_SYS, _sleep)
+
+
+# ------------------------------------------------------------- wraparound ---
+
+def test_sq_wraparound_many_times_over():
+    """100 submissions through an 8-deep SQ: head/tail wrap repeatedly and
+    every call still completes with its own retval."""
+    g = Genesys(GenesysConfig(ring_sq_depth=8, ring_batch_max=4))
+    try:
+        comps = []
+        for i in range(100):
+            comps += g.ring_submit([(Sys.ECHO, i)])
+        assert [c.result(timeout=10) for c in comps] == list(range(100))
+        assert g.ring.stats.submitted + g.ring.stats.fallback_doorbell == 100
+        assert g.ring.stats.bundles >= 100 // 8
+    finally:
+        g.shutdown()
+
+
+def test_batch_submission_exceeding_depth():
+    """One submit_many bigger than the SQ: the bulk publish + spin
+    backpressure stream it through without losing order of futures."""
+    g = Genesys(GenesysConfig(ring_sq_depth=16))
+    try:
+        comps = g.ring_submit([(Sys.ECHO, i) for i in range(100)])
+        assert [c.result(timeout=10) for c in comps] == list(range(100))
+    finally:
+        g.shutdown()
+
+
+def test_batch_larger_than_slot_area():
+    """A single submission exceeding the whole slot area must stream
+    through chunked acquire->publish, not deadlock on slot exhaustion."""
+    g = Genesys(GenesysConfig(n_slots=256, ring_sq_depth=64))
+    try:
+        comps = g.ring_submit([(Sys.ECHO, i) for i in range(1000)])
+        assert [c.result(timeout=30) for c in comps] == list(range(1000))
+    finally:
+        g.shutdown()
+
+
+def test_shutdown_flushes_unpolled_sq_entries():
+    """shutdown() right after submit: ring.close() must flush SQEs the
+    poller never saw, so drain cannot hang and every future resolves."""
+    g = Genesys(GenesysConfig())
+    comps = g.ring_submit([(Sys.ECHO, i) for i in range(50)])
+    t0 = time.monotonic()
+    g.shutdown()
+    assert time.monotonic() - t0 < 10
+    assert [c.result(timeout=1) for c in comps] == list(range(50))
+
+
+def test_handler_exception_keeps_worker_alive(gsys):
+    """A handler raising past dispatch's OSError net (dead heap handle ->
+    KeyError) surfaces -EIO on BOTH paths; workers and slots stay healthy."""
+    assert gsys.ring_call(Sys.PREAD64, 3, 999_999, 16, 0) == -5
+    assert gsys.ring_call(Sys.ECHO, 11) == 11
+    assert gsys.call(Sys.PREAD64, 3, 999_999, 16, 0) == -5
+    assert gsys.call(Sys.ECHO, 12) == 12
+    gsys.drain()
+    assert gsys.area.in_flight() == 0
+
+
+# ------------------------------------------------------------ backpressure --
+
+def _manual_ring(g: Genesys, depth: int) -> SyscallRing:
+    """Ring with NO poller: SQ state is fully deterministic; tests drive
+    processing via process_pending()."""
+    return SyscallRing(g.area, g.executor, sq_depth=depth,
+                       start_poller=False)
+
+
+def test_sq_full_raise_policy():
+    g = Genesys(GenesysConfig())
+    try:
+        ring = _manual_ring(g, depth=4)
+        comps = ring.submit_many([(Sys.ECHO, i) for i in range(4)],
+                                 sq_full="raise")
+        assert ring.sq_space() == 0
+        with pytest.raises(RingFull):
+            ring.submit_many([(Sys.ECHO, 99)], sq_full="raise")
+        # nothing was submitted by the failed call; the first 4 are intact
+        assert ring.process_pending(max_n=16) == 4
+        assert [c.result(timeout=5) for c in comps] == [0, 1, 2, 3]
+        ring.close()
+    finally:
+        g.shutdown()
+
+
+def test_sq_full_doorbell_fallback():
+    """Overflow entries fall back to the interrupt path and STILL resolve
+    their futures/CQEs."""
+    g = Genesys(GenesysConfig())
+    try:
+        ring = _manual_ring(g, depth=4)
+        comps = ring.submit_many([(Sys.ECHO, i) for i in range(7)],
+                                 want_cqe=True, sq_full="doorbell")
+        assert ring.stats.fallback_doorbell == 3
+        assert ring.stats.submitted == 4
+        # doorbell-routed calls complete without any polling
+        assert [c.result(timeout=5) for c in comps[4:]] == [4, 5, 6]
+        assert ring.process_pending(max_n=16) == 4
+        assert [c.result(timeout=5) for c in comps[:4]] == [0, 1, 2, 3]
+        g.drain()
+        uds = {ud for ud, _ in ring.reap(max_n=16, timeout=1)}
+        assert uds == {c.user_data for c in comps}
+        ring.close()
+    finally:
+        g.shutdown()
+
+
+def test_sq_full_spin_unblocks_when_poller_frees_space():
+    g = Genesys(GenesysConfig())
+    try:
+        ring = _manual_ring(g, depth=4)
+        ring.submit_many([(Sys.ECHO, i) for i in range(4)])
+        t = threading.Timer(0.05, ring.process_pending, kwargs={"max_n": 16})
+        t.start()
+        # spins until the timer pops the first four, then fits
+        comps = ring.submit_many([(Sys.ECHO, 42)], sq_full="spin",
+                                 spin_timeout_s=5.0)
+        assert ring.stats.sq_full_spins >= 1
+        assert ring.process_pending(max_n=16) >= 1
+        assert comps[0].result(timeout=5) == 42
+        t.join()
+        ring.close()
+    finally:
+        g.shutdown()
+
+
+# -------------------------------------------------------- out-of-order reap --
+
+def test_out_of_order_completion_and_reap(gsys):
+    """A slow call submitted FIRST completes after a fast one submitted
+    second: futures resolve independently and CQEs arrive in completion
+    order (the §8.3 weak-ordering + blocking combination)."""
+    _register_sleep(gsys)
+    # batch_max=1 so the two SQEs land in different worker bundles
+    ring = SyscallRing(gsys.area, gsys.executor, sq_depth=16, batch_max=1)
+    try:
+        slow = ring.submit(SLEEP_SYS, 200_000, want_cqe=True)
+        fast = ring.submit(Sys.ECHO, 7, want_cqe=True)
+        assert fast.result(timeout=5) == 7
+        assert not slow.done()          # reaped out of order
+        first = ring.reap(max_n=1, timeout=5)
+        assert first == [(fast.user_data, 7)]
+        assert slow.result(timeout=5) == 200_000
+        second = ring.reap(max_n=1, timeout=5)
+        assert second == [(slow.user_data, 200_000)]
+    finally:
+        ring.close()
+
+
+# ------------------------------------------------------------------- drain --
+
+def test_drain_covers_unpolled_sq_entries():
+    """drain() must block on ring entries even while they are still
+    sitting in the SQ, unseen by any poller."""
+    g = Genesys(GenesysConfig())
+    try:
+        ring = _manual_ring(g, depth=16)
+        comps = ring.submit_many([(Sys.ECHO, i) for i in range(5)])
+        t = threading.Timer(0.1, ring.process_pending, kwargs={"max_n": 16})
+        t.start()
+        g.drain()                       # must wait for the timer's pop
+        assert all(c.done() for c in comps)
+        t.join()
+        ring.close()
+    finally:
+        g.shutdown()
+
+
+def test_drain_covers_inflight_ring_entries(gsys):
+    _register_sleep(gsys)
+    comps = gsys.ring_submit([(SLEEP_SYS, 50_000)] * 4)
+    gsys.drain()
+    assert all(c.done() for c in comps)
+
+
+# ----------------------------------------------------------------- interop --
+
+def test_doorbell_and_ring_share_one_genesys(gsys, tmp_path):
+    """Both paths against the same area/executor: a file written via ring
+    pwrites reads back via doorbell preads, and stats split per path."""
+    path = str(tmp_path / "interop.bin")
+    ph = gsys.heap.register_bytes(path.encode())
+    fd = gsys.call(Sys.OPEN, ph, os.O_CREAT | os.O_RDWR, 0o644)
+    data = np.arange(256, dtype=np.uint8)
+    bh = gsys.heap.register(data.copy())
+    comps = gsys.ring_submit(
+        [(Sys.PWRITE64, fd, bh, 64, 64 * i, 64 * i) for i in range(4)])
+    assert [c.result(timeout=5) for c in comps] == [64] * 4
+    rbh = gsys.heap.new_buffer(256)
+    assert gsys.call(Sys.PREAD64, fd, rbh, 256, 0) == 256
+    np.testing.assert_array_equal(
+        np.asarray(gsys.heap.resolve(rbh)), data)
+    gsys.call(Sys.CLOSE, fd)
+    gsys.drain()
+    assert gsys.executor.stats.ring_processed >= 4
+    assert gsys.executor.stats.processed >= 7   # ring + doorbell calls
+
+
+def test_invoke_via_ring_inside_jit(gsys, tmp_path):
+    """Device path: WORK_ITEM batch through io_callback routed via the
+    ring — one SQE per row, results gathered from futures."""
+    import jax
+    import jax.numpy as jnp
+    path = str(tmp_path / "f.bin")
+    with open(path, "wb") as f:
+        f.write(bytes(range(64)))
+    ph = gsys.heap.register_bytes(path.encode())
+    fd = gsys.call(Sys.OPEN, ph, os.O_RDONLY, 0)
+    bh = gsys.heap.new_buffer(64)
+    args = jnp.stack([pack_args(fd, bh, 16, 16 * i, 16 * i)
+                      for i in range(4)])
+
+    def step(x):
+        res = gsys.invoke(Sys.PREAD64, args,
+                          granularity=Granularity.WORK_ITEM,
+                          ordering=Ordering.STRONG, blocking=True,
+                          via_ring=True)
+        return res.ret64()
+
+    out = jax.jit(step)(jnp.zeros(1))
+    assert list(np.asarray(out)) == [16] * 4
+    assert bytes(np.asarray(gsys.heap.resolve(bh)).tobytes()) == \
+        bytes(range(64))
+    gsys.call(Sys.CLOSE, fd)
+
+
+# ------------------------------------------------------------- fast paths ---
+
+def test_ring_echo_server_roundtrip(gsys):
+    from repro.serving.server import GenesysUdpServer
+    srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                           use_ring=True)
+    port = gsys.table._sockets[srv.fd].getsockname()[1]
+    client = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    client.bind(("127.0.0.1", 0))
+    cport = client.getsockname()[1]
+    client.settimeout(5)
+    th = threading.Thread(
+        target=lambda: srv.serve_echo(n_batches=1, reply_port=cport),
+        daemon=True)
+    th.start()
+    client.sendto(b"ring-echo", ("127.0.0.1", port))
+    data, _ = client.recvfrom(256)
+    assert data == b"ring-echo"
+    th.join(5)
+    assert gsys.executor.stats.ring_processed >= 1
+    srv.close()
+    client.close()
+
+
+def test_ring_loader_reads_real_tokens(gsys, tmp_path):
+    from repro.data.pipeline import GenesysDataLoader, write_token_shard
+    toks = np.arange(10_000, dtype=np.uint32)
+    shard = str(tmp_path / "t.bin")
+    write_token_shard(shard, toks)
+    dl = GenesysDataLoader(gsys, [shard], batch=2, seq=16, prefetch_depth=3,
+                           seed=1, use_ring=True)
+    b = dl.next_batch()
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+    assert gsys.executor.stats.ring_processed >= 1
+    dl.close()

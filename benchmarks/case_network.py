@@ -1,15 +1,22 @@
 """Paper §7.3: echo server — UDP bandwidth vs packet size, GENESYS
-sendto/recvfrom path vs the CPU baseline loop."""
+sendto/recvfrom path vs the CPU baseline loop. Plus the serve_model
+decode loop end-to-end on the genesys.sched tenant-ring path vs the
+classic CPU host loop: per-request latency under pipelined load."""
 from __future__ import annotations
 
 import socket
 import threading
 import time
 
+import numpy as np
+
 from repro.serving.server import CpuBaselineUdpServer, GenesysUdpServer
 from benchmarks.common import emit, make_gsys
 
 N_PACKETS = 200
+N_MODEL_REQS = 48           # serve_model comparison requests (after warmup)
+MODEL_WINDOW = 4            # outstanding requests (the "under load" part)
+MODEL_TOKENS = 4
 
 
 def _drive(server_port: int, payload: int, n: int, client,
@@ -33,7 +40,143 @@ def _drive(server_port: int, payload: int, n: int, client,
     return dt
 
 
+def _toy_model():
+    """Minimal serve_fn/params/cache with the serve_model contract: one
+    greedy decode step is next-token = cur + 1."""
+    import jax
+    import jax.numpy as jnp
+    serve_fn = jax.jit(
+        lambda params, cache, cur, cl: (cur.reshape(-1) + 1, cache))
+    return serve_fn, {}, {"k": jnp.zeros((1, 1), jnp.float32)}
+
+
+def _drive_model(server_port: int, client, n: int, warmup: int) -> list[float]:
+    """Pipelined decode-request load: keep MODEL_WINDOW requests
+    outstanding, match replies by id (reply tokens are id+1, id+2, ...),
+    return per-request latencies (seconds) for the measured requests.
+
+    The server terminates after serving ``n + warmup`` requests, so lost
+    datagrams are retransmitted (a few times) rather than abandoned — a
+    single drop must not strand the serving thread mid-loop."""
+    sent: dict[int, float] = {}
+    lats: list[float] = []
+    next_id = 0
+    total = n + warmup
+    retries = 3
+
+    def _send(rid=None):
+        nonlocal next_id
+        if rid is None:
+            rid = next_id
+            next_id += 1
+        # keep the FIRST send's timestamp on retransmits: the request's
+        # latency started when it was originally issued, not re-issued
+        sent.setdefault(rid, time.monotonic())
+        client.sendto(np.asarray([rid], np.int32).tobytes(),
+                      ("127.0.0.1", server_port))
+
+    for _ in range(min(MODEL_WINDOW, total)):
+        _send()
+    got = 0
+    while got < total:
+        try:
+            data, _ = client.recvfrom(4096)
+        except socket.timeout:
+            if retries == 0 or not sent:
+                break
+            retries -= 1
+            for rid in list(sent):         # retransmit the outstanding ones
+                _send(rid)
+            continue
+        toks = np.frombuffer(data, dtype=np.int32)
+        rid = int(toks[0]) - 1
+        t0 = sent.pop(rid, None)
+        if t0 is not None:
+            got += 1
+            if got > warmup:
+                lats.append(time.monotonic() - t0)
+        if next_id < total:
+            _send()
+    assert got >= total * 0.8, f"lost too many replies ({got}/{total})"
+    return lats
+
+
+def _serve_model_cmp() -> None:
+    """serve_model decode loop: genesys.sched tenant-ring path end-to-end
+    vs the classic CPU host loop, per-request latency under load.
+
+    The CPU baseline is expected to win on a single-host toy model — it
+    pays no cross-thread syscall indirection; what this reports is the
+    offload tax of the GENESYS architecture (whose premise is a device
+    that cannot make host syscalls at all) and how the tenant-ring path
+    bounds its tail."""
+    import sys as _sys
+    old_switch = _sys.getswitchinterval()
+    _sys.setswitchinterval(0.0005)   # see fig9_qos: tame GIL monopolization
+    try:
+        _serve_model_cmp_inner()
+    finally:
+        _sys.setswitchinterval(old_switch)
+
+
+def _serve_model_cmp_inner() -> None:
+    serve_fn, params, cache = _toy_model()
+    warmup = MODEL_WINDOW + 2
+    total = N_MODEL_REQS + warmup
+
+    # GENESYS path: recvfrom/sendto via per-tenant rings (serve-rx tenant
+    # + one tenant per reply port)
+    g = make_gsys(n_workers=2, sched_pollers=1)
+    srv = GenesysUdpServer(g, port=0, max_batch=2, batch_window_s=0.0002,
+                           payload=4096, use_tenants=True)
+    port = g.table._sockets[srv.fd].getsockname()[1]
+    client = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    client.bind(("127.0.0.1", 0))
+    client.settimeout(5)
+    th = threading.Thread(
+        target=srv.serve_model,
+        args=(serve_fn, params, cache),
+        kwargs=dict(n_batches=4 * total, reply_port=client.getsockname()[1],
+                    max_tokens=MODEL_TOKENS, n_requests=total),
+        daemon=True)
+    th.start()
+    lats = _drive_model(port, client, N_MODEL_REQS, warmup)
+    th.join(10)
+    lats.sort()
+    emit("case_network/serve_model_ring_p50", lats[len(lats) // 2] * 1e6,
+         f"{srv.stats.tokens_out}_tokens_ring_path")
+    emit("case_network/serve_model_ring_p99",
+         lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e6, "us")
+    srv.close()
+    client.close()
+    g.shutdown()
+
+    # CPU baseline: classic host decode loop
+    srv2 = CpuBaselineUdpServer(port=0, payload=4096)
+    port2 = srv2.sock.getsockname()[1]
+    client2 = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    client2.bind(("127.0.0.1", 0))
+    client2.settimeout(5)
+    th2 = threading.Thread(
+        target=srv2.serve_model,
+        args=(serve_fn, params, cache),
+        kwargs=dict(n_batches=total, reply_port=client2.getsockname()[1],
+                    max_tokens=MODEL_TOKENS),
+        daemon=True)
+    th2.start()
+    lats2 = _drive_model(port2, client2, N_MODEL_REQS, warmup)
+    th2.join(10)
+    lats2.sort()
+    emit("case_network/serve_model_cpu_p50", lats2[len(lats2) // 2] * 1e6,
+         "us_cpu_baseline")
+    emit("case_network/serve_model_cpu_p99",
+         lats2[min(len(lats2) - 1, int(len(lats2) * 0.99))] * 1e6, "us")
+    srv2.close()
+    client2.close()
+
+
 def run() -> None:
+    _serve_model_cmp()
     for payload in (512, 2048, 4096):
         # GENESYS path
         g = make_gsys(n_workers=4)

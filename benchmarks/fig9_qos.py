@@ -1,0 +1,249 @@
+"""Fig 9 (repo extension of the paper's §6 study, multi-tenant): QoS
+isolation and multi-poller scaling for genesys.sched per-tenant rings.
+
+Part A — isolation. A well-behaved *latency* tenant issues one short
+blocking IOWAIT call at a time and measures its reap round-trip
+(p50/p99), while a *flood* tenant saturates its own ring with batches of
+the same IOWAIT calls (a handler that sleeps, standing in for blocking
+storage/network work, GIL released). The probe is deliberately the same
+kind of call as the flood: ``time.sleep`` has a kernel-timer floor of
+roughly a millisecond in this environment, so an instant probe (ECHO)
+would make *any* head-of-line blocking look like a many-x regression —
+what QoS actually promises is that a short blocking call costs ~its own
+service time, not the flood's backlog. Three scenarios:
+
+  * ``baseline``   — latency tenant alone (unloaded floor);
+  * ``nopolicy``   — flood active, no QoS policies: the poller round-robins
+                     and inlines whole 64-entry flood bundles, so a probe
+                     can wait an entire bundle of sleeps (the collapse the
+                     shared-channel design suffers under multi-tenancy);
+  * ``policy``     — TokenBucket (flood admission paced to ~6% duty) +
+                     StrictPriority (latency tenant reaps first) + WFQ
+                     (flood's per-visit quantum shrinks by weight ratio, so
+                     head-of-line blocking is a couple of entries, and the
+                     visit order re-evaluates between quanta).
+
+Gate: policy-on flooded p99 <= 3x the unloaded baseline p99, judged on the
+MEDIAN of several interleaved (baseline, flooded) scenario pairs — a p99
+from a few hundred samples on a 2-CPU shared box is noisy, and
+interleaving keeps scheduler drift from landing on one side only (same
+rationale as fig8's median-of-ratios). The unbounded no-policy
+degradation is reported for contrast, not gated.
+
+Part B — scaling. Two tenant rings of IOWAIT calls reaped by an *inline*
+PollerGroup (SQPOLL mode: pollers run the handlers, which block): 2
+pollers must sustain >= 1.5x the reap throughput of 1 poller.
+
+Output CSV: name,us_per_call,derived (same convention as the other figs).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+
+if __package__ in (None, ""):           # `python benchmarks/fig9_qos.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from repro.core.genesys import (Genesys, GenesysConfig, RingFull,      # noqa: E402
+                                StrictPriority, TokenBucket, WeightedFair)
+from benchmarks.common import emit                                     # noqa: E402
+
+IOWAIT_SYS = 901            # sleeps args[0] microseconds, releasing the GIL
+PROBE_US = 200              # latency tenant's blocking call
+FLOOD_US = 200              # flood handler sleep per call (NB: the actual
+                            # sleep has a ~1ms kernel-timer floor, which is
+                            # what makes unthrottled 64-entry bundles hurt)
+FLOOD_BATCH = 16            # flood submission batch (SQ backlog still hits
+                            # the full 64-entry bundle pop with no policies)
+FLOOD_RATE = 200.0          # calls/s admitted under TokenBucket
+PROBE_GAP_S = 0.002         # pacing between latency probes
+SCALE_US = 300              # scaling-run handler sleep per call
+# weight ratio 64:1 drives the flood's per-visit quantum down to ONE entry
+# (WeightedFair.quantum), so a probe waits at most one flood call's service
+# time before the strict-priority order picks it up
+LAT_WEIGHT = 64.0
+
+
+def _register_iowait(g: Genesys) -> None:
+    def _iowait(us, *_):
+        time.sleep(us / 1e6)
+        return us
+    g.table.register(IOWAIT_SYS, _iowait)
+
+
+def _make_qos_gsys(policies: bool) -> Genesys:
+    g = Genesys(GenesysConfig(
+        n_workers=2, sched_pollers=1, sched_inline=True,
+        tenant_slots=512, tenant_sq_depth=256))
+    _register_iowait(g)
+    if policies:
+        g.use_policies(TokenBucket(), StrictPriority(), WeightedFair())
+    return g
+
+
+def _percentiles(xs):
+    xs = sorted(xs)
+    return (xs[len(xs) // 2], xs[min(len(xs) - 1, int(len(xs) * 0.99))])
+
+
+def _qos_scenario(*, flood: bool, policies: bool, probes: int
+                  ) -> tuple[float, float]:
+    """Returns (p50_s, p99_s) of the latency tenant's reap round-trip."""
+    g = _make_qos_gsys(policies)
+    stop = threading.Event()
+    flooder = None
+    try:
+        lat = g.tenant("latency", weight=LAT_WEIGHT, priority=10)
+        fl = g.tenant("flood", weight=1.0, priority=0,
+                      rate_limit=FLOOD_RATE if policies else None,
+                      burst=FLOOD_BATCH)
+
+        def _flood_loop():
+            calls = [(IOWAIT_SYS, FLOOD_US)] * FLOOD_BATCH
+            while not stop.is_set():
+                try:
+                    fl.submit(calls, sq_full="raise")
+                except RingFull:
+                    time.sleep(0.001)   # ring jammed: only the flood waits
+
+        if flood:
+            flooder = threading.Thread(target=_flood_loop, daemon=True)
+            flooder.start()
+            time.sleep(0.05)            # let the flood backlog build
+        samples = []
+        for _ in range(probes):
+            t0 = time.perf_counter()
+            lat.call(IOWAIT_SYS, PROBE_US, timeout=30)
+            samples.append(time.perf_counter() - t0)
+            time.sleep(PROBE_GAP_S)
+        return _percentiles(samples)
+    finally:
+        stop.set()
+        if flooder is not None:
+            flooder.join(timeout=5)
+        g.shutdown()
+
+
+def _scaling_run(n_pollers: int, calls_per_tenant: int) -> float:
+    """Reap throughput (calls/s) of an inline PollerGroup over two tenant
+    rings of GIL-releasing IOWAIT calls."""
+    g = Genesys(GenesysConfig(
+        n_workers=2, sched_pollers=n_pollers, sched_inline=True,
+        tenant_slots=1024, tenant_sq_depth=1024))
+    _register_iowait(g)
+    try:
+        tenants = [g.tenant("a"), g.tenant("b")]
+        batch = [(IOWAIT_SYS, SCALE_US)] * 64
+        all_comps: list[list] = [[], []]
+
+        def _submit(i):
+            n = 0
+            while n < calls_per_tenant:
+                all_comps[i] += tenants[i].submit(batch)
+                n += len(batch)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=_submit, args=(i,)) for i in (0, 1)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for comps in all_comps:
+            for c in comps:
+                c.result(timeout=60)
+        dt = time.perf_counter() - t0
+        total = sum(len(c) for c in all_comps)
+        return total / dt
+    finally:
+        g.shutdown()
+
+
+def run(quick: bool = False) -> dict[str, float]:
+    probes = 150 if quick else 400
+    calls_per_tenant = 256 if quick else 512
+    out: dict[str, float] = {}
+    # CPython's default 5ms GIL switch interval lets one CPU-bound burst
+    # publish starve the probe thread for milliseconds — far above the
+    # latencies under test. A real deployment publishes SQEs outside the
+    # GIL; approximate that by switching promptly.
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)
+    try:
+        return _run(out, probes, calls_per_tenant)
+    finally:
+        sys.setswitchinterval(old_switch)
+
+
+def _run(out, probes, calls_per_tenant) -> dict[str, float]:
+
+    # -- part A: QoS isolation ------------------------------------------------
+    # interleaved repeats: each round measures (unloaded baseline, flooded
+    # with policies) back to back, and the gate is the median per-round
+    # ratio, so machine-load drift hits both sides
+    rounds = 3
+    pairs = []
+    for _ in range(rounds):
+        base = _qos_scenario(flood=False, policies=False, probes=probes)
+        pol = _qos_scenario(flood=True, policies=True, probes=probes)
+        pairs.append((base, pol))
+    base_p50, base_p99 = sorted(p[0] for p in pairs)[rounds // 2]
+    pol_p50, pol_p99 = sorted(p[1] for p in pairs)[rounds // 2]
+    ratios = sorted(p[1][1] / p[0][1] for p in pairs)
+    out["qos_p99_ratio"] = ratios[rounds // 2]
+    emit("fig9/latency_baseline_p50", base_p50 * 1e6, "us_unloaded")
+    emit("fig9/latency_baseline_p99", base_p99 * 1e6, "us_unloaded")
+    # report-only contrast scenario: each unpoliced probe takes ~a whole
+    # flood bundle (tens of ms), so fewer samples suffice
+    nop_p50, nop_p99 = _qos_scenario(flood=True, policies=False,
+                                     probes=min(probes, 60))
+    out["nopolicy_p99_ratio"] = nop_p99 / base_p99
+    emit("fig9/latency_flood_nopolicy_p50", nop_p50 * 1e6, "us")
+    emit("fig9/latency_flood_nopolicy_p99", nop_p99 * 1e6,
+         f"{out['nopolicy_p99_ratio']:.1f}x_baseline_p99")
+    emit("fig9/latency_flood_policy_p50", pol_p50 * 1e6, "us")
+    emit("fig9/latency_flood_policy_p99", pol_p99 * 1e6,
+         f"{out['qos_p99_ratio']:.2f}x_baseline_p99_median_of_"
+         f"{rounds}")
+
+    # -- part B: multi-poller scaling (interleaved, median ratio) -------------
+    scale = []
+    for _ in range(3):
+        thr1 = _scaling_run(1, calls_per_tenant)
+        thr2 = _scaling_run(2, calls_per_tenant)
+        scale.append((thr1, thr2))
+    thr1, thr2 = sorted(scale, key=lambda p: p[1] / p[0])[1]
+    out["poller_scaling"] = sorted(b / a for a, b in scale)[1]
+    emit("fig9/reap_throughput_1poller", 1e6 / thr1, f"{thr1:.0f}_calls_per_s")
+    emit("fig9/reap_throughput_2poller", 1e6 / thr2, f"{thr2:.0f}_calls_per_s")
+    emit("fig9/poller_scaling", out["poller_scaling"], "x_2p_over_1p_median")
+    return out
+
+
+def main(argv=None) -> int:
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    t0 = time.monotonic()
+    out = run(quick=quick)
+    print(f"# fig9 done in {time.monotonic() - t0:.1f}s", flush=True)
+    ok = True
+    if out["qos_p99_ratio"] > 3.0:
+        print(f"# FAIL: flooded p99 with policies = "
+              f"{out['qos_p99_ratio']:.2f}x baseline (> 3x)", flush=True)
+        ok = False
+    if out["poller_scaling"] < 1.5:
+        print(f"# FAIL: 2-poller scaling = {out['poller_scaling']:.2f}x "
+              f"(< 1.5x)", flush=True)
+        ok = False
+    if ok:
+        print(f"# QoS gate OK: policy p99 {out['qos_p99_ratio']:.2f}x "
+              f"baseline (no-policy: {out['nopolicy_p99_ratio']:.1f}x), "
+              f"2-poller scaling {out['poller_scaling']:.2f}x", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

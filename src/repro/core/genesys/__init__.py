@@ -6,32 +6,45 @@ knobs mirror the paper: invocation granularity (WORK_ITEM / WORK_GROUP /
 KERNEL), ordering (STRONG / RELAXED_PRODUCER / RELAXED_CONSUMER), blocking
 vs non-blocking, and host-side coalescing (window + max batch).
 
-Two CPU-side delivery paths coexist on one `Genesys` instance:
+Three CPU-side delivery paths coexist on one `Genesys` instance — choose
+by call pattern:
 
 * **doorbell** (paper §5): every call raises an "interrupt" that the
   dispatcher coalesces into worker bundles. Retvals return through the
   slot-state handshake (READY -> PROCESSING -> FINISHED), so a blocking
-  caller spins/sleeps on its slot. Choose it for sparse, latency-tolerant
-  calls, or when the caller needs the paper's exact Fig-4 semantics.
-* **genesys.uring** (``uring.py`` / ``completion.py``): io_uring-style
-  shared-memory submission/completion rings. Submissions are SQEs pointing
-  at area slots; a host :class:`~repro.core.genesys.uring.RingPoller`
-  busy-polls (adaptively parking when idle) instead of taking per-call
-  interrupts, and hands whole batches to the same worker pool. Retvals
-  come back as :class:`~repro.core.genesys.completion.Completion` futures
-  and optional CQEs, reapable **out of order** (the paper §8.3
-  weak-ordering + blocking combination), while the area slot itself is
-  recycled immediately. Choose it for high-rate syscall streams (batched
-  reads/writes, serving loops): throughput scales with batch size because
-  per-call cost is two ring operations, not an interrupt + two queue hops.
+  caller spins/sleeps on its slot. Choose it for **sparse,
+  latency-tolerant calls**, or when the caller needs the paper's exact
+  Fig-4 slot semantics.
+* **shared ring** (``uring.py`` / ``completion.py``): io_uring-style
+  submission/completion rings over the whole slot area. Submissions are
+  SQEs; a host poller (now a single-member
+  :class:`~repro.core.genesys.sched.PollerGroup`) busy-polls with
+  SQPOLL-style adaptive parking and hands whole batches to the worker
+  pool. Retvals come back as Completion futures / CQEs, reapable **out of
+  order** (paper §8.3), while slots recycle immediately. Choose it for
+  **high-rate syscall streams from a single trusted workload** (batched
+  reads/writes, one serving loop): per-call cost is two ring operations,
+  not an interrupt + two queue hops.
+* **per-tenant rings** (``sched.py`` / ``tenant.py``, via
+  ``Genesys.tenant(name, ...)``): each tenant gets a private ring over a
+  *carved partition* of the slot area, a shared
+  :class:`~repro.core.genesys.sched.PolicyEngine` runs gpu_ext-style
+  ``on_submit``/``on_full``/``on_reap`` hooks (token-bucket rate limits,
+  strict priority, weighted-fair queueing), and a multi-poller
+  :class:`~repro.core.genesys.sched.PollerGroup` reaps all tenant SQs in
+  QoS order. Choose it when **multiple workloads share one Genesys** — a
+  serving loop next to a data-prefetcher, per-client traffic, latency
+  tenants next to batch tenants — i.e. whenever one flooding submitter
+  must not be able to starve another's syscalls. Slot exhaustion, SQ
+  backpressure, rate limiting, and reap bandwidth are all isolated or
+  apportioned per tenant.
 
-Ordering guarantees: both paths dispatch bundles to a shared worker pool,
-so cross-call completion order is unspecified unless the caller imposes it
-(Completion futures, `drain()`, or dataflow deps via `invoke`). Within one
-ring bundle (<= ``ring_batch_max`` SQEs) calls execute serially in
-submission order, mirroring the doorbell path's coalesced bundles.
-`Genesys.drain()` is the §8.3 barrier over *both* paths, including SQ
-entries the poller has not yet seen.
+Ordering guarantees: all paths dispatch to the shared worker pool (or, in
+``sched_inline`` SQPOLL mode, the poller threads), so cross-call
+completion order is unspecified unless the caller imposes it (Completion
+futures, `drain()`, or dataflow deps via `invoke`). Within one ring bundle
+calls execute serially in submission order. `Genesys.drain()` is the §8.3
+barrier over *all* paths, including SQ entries no poller has seen yet.
 """
 from repro.core.genesys.area import (
     SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,
@@ -41,8 +54,13 @@ from repro.core.genesys.executor import Executor, ExecutorStats
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.syscalls import Sys, SyscallTable, make_default_table
+from repro.core.genesys.sched import (
+    Policy, PolicyEngine, PollerGroup, QosReject, RingPoller, SchedStats,
+    StrictPriority, TokenBucket, WeightedFair,
+)
+from repro.core.genesys.tenant import Tenant, TenantStats
 from repro.core.genesys.uring import (
-    RingFull, RingPoller, RingStats, SyscallRing,
+    RingFull, RingStats, SyscallRing,
 )
 from repro.core.genesys.invoke import (
     Genesys, Granularity, Ordering, GenesysConfig,
@@ -55,5 +73,8 @@ __all__ = [
     "Executor", "ExecutorStats", "HostHeap", "MemoryPool",
     "Sys", "SyscallTable", "make_default_table",
     "RingFull", "RingPoller", "RingStats", "SyscallRing",
+    "Policy", "PolicyEngine", "PollerGroup", "QosReject", "SchedStats",
+    "StrictPriority", "TokenBucket", "WeightedFair",
+    "Tenant", "TenantStats",
     "Genesys", "Granularity", "Ordering", "GenesysConfig", "table",
 ]

@@ -87,6 +87,49 @@ class SyscallArea:
         self._lock = threading.Lock()
         self._free = list(range(self.n_slots - 1, -1, -1))
         self._finished = threading.Condition(self._lock)
+        self._carved = 0          # slots lent out to partitions (see carve())
+
+    # -- partitioning (genesys.sched per-tenant rings) -------------------------
+    def carve(self, n: int) -> "SyscallArea":
+        """Split off a partition of ``n`` slots for a tenant ring.
+
+        The partition shares this area's backing ``slots``/generation arrays
+        — global slot indices stay valid for the executor and ring bundles —
+        but owns its own lock and free list over a disjoint slot set, so one
+        tenant exhausting its partition never blocks another tenant's
+        acquire. Return the slots with :meth:`reclaim`.
+        """
+        n = int(n)
+        with self._lock:
+            if n <= 0 or n > len(self._free):
+                raise ValueError(
+                    f"cannot carve {n} slots: {len(self._free)} free "
+                    f"of {self.n_slots}")
+            taken = [self._free.pop() for _ in range(n)]
+            self._carved += n
+        part = SyscallArea.__new__(SyscallArea)
+        part.n_slots = n
+        part.slots = self.slots          # shared backing array: the partition
+        part._gen = self._gen            # is a *range of the same area*
+        part._lock = threading.Lock()
+        part._free = taken
+        part._finished = threading.Condition(part._lock)
+        part._carved = 0
+        return part
+
+    def reclaim(self, part: "SyscallArea") -> None:
+        """Return a (drained) partition's slots to this area's free list."""
+        with part._lock:
+            if len(part._free) != part.n_slots:
+                raise RuntimeError(
+                    f"partition still has {part.n_slots - len(part._free)} "
+                    "slots in flight")
+            slots, part._free = part._free, []
+            part.n_slots = 0
+        with self._lock:
+            self._free.extend(slots)
+            self._carved -= len(slots)
+            self._finished.notify_all()
 
     # -- atomic state transitions ------------------------------------------
     def _cas(self, slot: int, old: SlotState, new: SlotState) -> bool:
@@ -250,4 +293,4 @@ class SyscallArea:
 
     def in_flight(self) -> int:
         with self._lock:
-            return self.n_slots - len(self._free)
+            return self.n_slots - len(self._free) - self._carved

@@ -76,15 +76,17 @@ class Executor:
             w.start()
 
     # -- device side: the interrupt -------------------------------------------
-    def interrupt(self, slot: int, on_complete=None) -> None:
+    def interrupt(self, slot: int, on_complete=None, area=None) -> None:
         """Device -> CPU doorbell (paper: s_sendmsg scalar instruction).
         ``on_complete(slot, retval)`` fires after the call is processed —
-        the ring's SQ-full fallback uses it to keep CQE delivery uniform."""
+        the ring's SQ-full fallback uses it to keep CQE delivery uniform.
+        ``area`` overrides the slot's home area (tenant-partition slots must
+        retire to their partition's free list, not the parent's)."""
         with self._inflight_lock:
             self._inflight += 1
         with self._stats_lock:
             self.stats.interrupts += 1
-        self._doorbell.put((slot, on_complete))
+        self._doorbell.put((slot, on_complete, area))
 
     def add_inflight(self, n: int) -> None:
         """Account ring submissions the moment they land in the SQ, so
@@ -96,9 +98,9 @@ class Executor:
     def submit_bundle(self, bundle, *, counted: bool = False) -> None:
         """Enqueue a polling-mode bundle directly on the worker pool,
         bypassing doorbell + dispatcher (one queue op per batch). A bundle
-        is either a list of ``(slot, on_complete)`` pairs or an object with
-        ``process(executor)`` that owns its own accounting (the ring's
-        batch). ``counted=True`` means add_inflight() already ran."""
+        is either a list of ``(slot, on_complete, area)`` triples or an
+        object with ``process(executor)`` that owns its own accounting (the
+        ring's batch). ``counted=True`` means add_inflight() already ran."""
         if not len(bundle):
             return
         if not counted:
@@ -143,22 +145,23 @@ class Executor:
             if hasattr(bundle, "process"):     # polling-mode batch (ring)
                 bundle.process(self)
             else:
-                for slot, on_complete in bundle:  # serial in bundle (§4.2)
-                    self._process(slot, on_complete)
+                for slot, on_complete, area in bundle:  # serial (§4.2)
+                    self._process(slot, on_complete, area)
             dt = time.monotonic() - t0
             with self._stats_lock:
                 self.stats.busy_s += dt
 
-    def _process(self, slot: int, on_complete=None) -> None:
+    def _process(self, slot: int, on_complete=None, area=None) -> None:
+        area = self.area if area is None else area
         try:
-            if not self.area.claim_for_processing(slot):
+            if not area.claim_for_processing(slot):
                 return  # raced / cancelled
-            rec = self.area.slots[slot]
+            rec = area.slots[slot]
             try:
                 ret = self.table.dispatch(int(rec["sysno"]), rec["args"])
             except Exception:            # non-OSError handler failure: the
                 ret = -5                 # caller sees -EIO, the slot and
-            self.area.complete(slot, ret)   # worker thread stay healthy
+            area.complete(slot, ret)        # worker thread stay healthy
             if on_complete is not None:
                 on_complete(slot, ret)
             with self._stats_lock:

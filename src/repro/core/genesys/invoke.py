@@ -39,7 +39,9 @@ from repro.core.genesys.completion import Completion
 from repro.core.genesys.executor import Executor
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
+from repro.core.genesys.sched import PolicyEngine, PollerGroup
 from repro.core.genesys.syscalls import SyscallTable, make_default_table
+from repro.core.genesys.tenant import Tenant
 from repro.core.genesys.uring import SyscallRing
 
 
@@ -68,6 +70,13 @@ class GenesysConfig:
     ring_batch_max: int = 64      # SQEs per executor bundle
     ring_spin_polls: int = 64     # busy polls before the poller parks
     ring_max_sleep_s: float = 0.002
+    # genesys.sched: per-tenant ring + multi-poller reaper knobs (lazy; the
+    # PollerGroup only starts when the first tenant is created)
+    sched_pollers: int = 1        # poller threads reaping tenant SQs
+    sched_inline: bool = False    # SQPOLL mode: pollers dispatch bundles
+    tenant_slots: int = 256       # area partition carved per tenant
+    tenant_sq_depth: int = 128
+    tenant_cq_depth: int = 512
 
 
 # ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
@@ -166,6 +175,10 @@ class Genesys:
         )
         self._lock = threading.Lock()
         self._ring: SyscallRing | None = None
+        # genesys.sched: tenant registry + shared policy engine + pollers
+        self.engine = PolicyEngine()
+        self._tenants: dict[str, Tenant] = {}
+        self._sched: PollerGroup | None = None
 
     @property
     def ring(self) -> SyscallRing:
@@ -209,9 +222,101 @@ class Genesys:
     def shutdown(self) -> None:
         with self._lock:
             ring, self._ring = self._ring, None
+            tenants, self._tenants = dict(self._tenants), {}
+            sched, self._sched = self._sched, None
+        if sched is not None:
+            sched.stop()
+        for t in tenants.values():
+            # flush SQEs the stopped pollers never saw, so drain() (inside
+            # executor.shutdown) cannot hang on unpopped tenant entries
+            while t.ring.process_pending():
+                pass
         if ring is not None:
             ring.close()
         self.executor.shutdown()
+
+    # ------------- genesys.sched: tenants, policies, pollers --------------------
+    @property
+    def sched(self) -> PollerGroup:
+        """The shared multi-poller reaper over all tenant rings (created on
+        first tenant; ``sched_pollers``/``sched_inline`` config knobs)."""
+        with self._lock:
+            return self._sched_locked()
+
+    def _sched_locked(self) -> PollerGroup:
+        if self._sched is None:
+            c = self.config
+            self._sched = PollerGroup(
+                n_pollers=c.sched_pollers, engine=self.engine,
+                inline=c.sched_inline, spin_polls=c.ring_spin_polls,
+                max_sleep_s=c.ring_max_sleep_s)
+            self._sched.start()
+        return self._sched
+
+    def use_policies(self, *policies) -> PolicyEngine:
+        """Install gpu_ext-style QoS policies (sched.Policy instances) on
+        the shared engine; they apply to every tenant's submissions and to
+        the poller group's reap order."""
+        for p in policies:
+            self.engine.add(p)
+        return self.engine
+
+    def tenant(self, name: str, *, weight: float = 1.0, priority: int = 0,
+               rate_limit: float | None = None, burst: float | None = None,
+               n_slots: int | None = None, sq_depth: int | None = None,
+               batch_max: int | None = None) -> Tenant:
+        """Get or create the named tenant: a private SyscallRing over a
+        carved partition of the slot area, registered with the shared
+        PollerGroup and policy engine. Re-requesting a name returns the
+        existing tenant (QoS kwargs are only applied on first creation)."""
+        c = self.config
+        with self._lock:
+            t = self._tenants.get(name)
+            if t is not None:
+                return t
+            part = self.area.carve(n_slots or c.tenant_slots)
+            ring = SyscallRing(
+                part, self.executor,
+                sq_depth=sq_depth or c.tenant_sq_depth,
+                cq_depth=c.tenant_cq_depth,
+                batch_max=batch_max or c.ring_batch_max,
+                start_poller=False)
+            t = Tenant(name, ring, weight=weight, priority=priority,
+                       rate_limit=rate_limit, burst=burst, engine=self.engine)
+            self._sched_locked().add(ring, tenant=t)
+            self._tenants[name] = t
+            return t
+
+    def tenants(self) -> dict[str, Tenant]:
+        with self._lock:
+            return dict(self._tenants)
+
+    def close_tenant(self, name: str) -> None:
+        """Retire a tenant: deregister it from the poller group, flush and
+        complete its outstanding SQEs, and return its slot partition to
+        the shared area (so tenant churn does not leak slots)."""
+        with self._lock:
+            t = self._tenants.pop(name, None)
+            sched = self._sched
+        if t is None:
+            return
+        if sched is not None:
+            sched.remove(t.ring)
+        while t.ring.process_pending():    # SQEs no poller will see now
+            pass
+        self.executor.drain()              # partition slots must be home
+        self.area.reclaim(t.area)
+        self.engine.closed(t)              # drop per-tenant policy state
+
+    # ------------- registered buffers (io_uring READ_FIXED analogue) ------------
+    def register_buffers(self, handles) -> list[int]:
+        """Pin heap handles into the syscall table's fixed-buffer index
+        table. The returned indices are valid as the buffer argument of
+        ``Sys.PREAD64_FIXED`` / ``Sys.RECVFROM_FIXED``, whose handlers
+        index the table directly — no per-call HostHeap lock/dict hop on
+        the hot path (io_uring registered-buffer semantics)."""
+        return [self.table.register_fixed(self.heap.resolve(h))
+                for h in handles]
 
     # ------------- host-side ring path (genesys.uring) --------------------------
     def ring_call(self, sysno: int, *args, hw_id: int = 0,

@@ -1,0 +1,482 @@
+"""genesys.sched: pluggable QoS policies and the multi-poller fair reaper.
+
+GENESYS (paper §5-§6) funnels every device syscall through one shared
+channel; under multi-tenant load the shared SQ becomes the collapse point —
+one flooding workload starves everyone else's syscalls. This module is the
+scheduling layer that fixes it:
+
+  * each :class:`~repro.core.genesys.tenant.Tenant` owns its own
+    :class:`~repro.core.genesys.uring.SyscallRing` over a *partition* of the
+    :class:`~repro.core.genesys.area.SyscallArea`
+    (:meth:`SyscallArea.carve`), so admission, SQ backpressure, and slot
+    exhaustion are all per-tenant;
+  * a :class:`PolicyEngine` runs gpu_ext-style hooks — ``on_submit`` /
+    ``on_full`` / ``on_reap`` — so admission, throttling, and priority
+    decisions are pluggable code, not hard-wired queue behaviour. Three
+    policies ship: :class:`TokenBucket` (submission-side rate limiting),
+    :class:`StrictPriority` (latency tenants reap first), and
+    :class:`WeightedFair` (WFQ virtual-time credit accounting per tenant
+    and per sysno);
+  * a :class:`PollerGroup` replaces the single-ring ``RingPoller``: N
+    poller threads reap across all tenant SQs in policy order (WFQ vtime
+    ascending under :class:`WeightedFair`, priority first under
+    :class:`StrictPriority`, round-robin otherwise), re-evaluating the
+    order between per-tenant quanta so a latency tenant's SQE never waits
+    behind more than one quantum of a batch tenant's backlog.
+
+Poller modes: the default hands popped bundles to the shared
+:class:`~repro.core.genesys.executor.Executor` worker pool (one queue op
+per bundle, same ``drain()`` barrier as the doorbell path);
+``inline=True`` is io_uring SQPOLL's do-the-work-in-the-poller mode — the
+poller thread dispatches the bundle itself, which keeps latency tenants
+out of the shared worker queue and lets reap throughput scale with poller
+count when handlers block (sleep/IO releases the GIL).
+
+Idle pollers park exactly like the single-ring reaper did: after
+``spin_polls`` empty rounds they arm every member ring's ``need_wakeup``
+flag and wait on one shared event; the first submitter to make any SQ
+non-empty delivers one edge-triggered wakeup for the whole group.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+class QosReject(RuntimeError):
+    """A policy refused admission of a submission (e.g. rate limit in
+    ``reject`` mode). Nothing was submitted."""
+
+
+class Policy:
+    """Base class for gpu_ext-style scheduling hooks.
+
+    Subclasses override any subset; every hook has a no-op default so a
+    policy can care about exactly one decision point.
+
+      * ``on_submit(tenant, calls)`` — admission: return ``None`` to admit
+        immediately, a float to delay the submitter that many seconds
+        (throttle), or raise :class:`QosReject` to refuse;
+      * ``on_full(tenant, overflow)`` — the tenant's SQ lacks space for
+        ``overflow`` entries: return a ``sq_full`` backpressure policy name
+        (``"spin"`` / ``"doorbell"`` / ``"raise"``) or ``None`` to defer;
+      * ``on_reap(tenant, entries)`` — a poller popped ``entries``
+        (``(slot, user_data, flags, sysno)`` tuples) from the tenant's SQ:
+        charge credits / update accounting;
+      * ``order_key(tenant)`` — sort key contribution for poller visit
+        order (ascending); ``None`` means no opinion;
+      * ``quantum(tenant, default)`` — bound how many SQEs one poller
+        visit may pop from this tenant; ``None`` means no opinion;
+      * ``on_close(tenant)`` — the tenant is being retired
+        (:meth:`Genesys.close_tenant`): drop its accounting state.
+    """
+
+    def on_submit(self, tenant, calls):
+        return None
+
+    def on_full(self, tenant, overflow: int):
+        return None
+
+    def on_reap(self, tenant, entries) -> None:
+        pass
+
+    def order_key(self, tenant):
+        return None
+
+    def quantum(self, tenant, default: int):
+        return None
+
+    def on_close(self, tenant) -> None:
+        pass
+
+
+class PolicyEngine:
+    """Ordered chain of :class:`Policy` hooks shared by all tenants.
+
+    Admission delays combine by max; the first policy with an ``on_full``
+    opinion wins; visit order sorts by the tuple of every policy's
+    ``order_key``, in chain order (so ``StrictPriority`` before
+    ``WeightedFair`` means priority dominates and vtime tie-breaks).
+    """
+
+    def __init__(self, policies=()):
+        self.policies: list[Policy] = list(policies)
+
+    def add(self, policy: Policy) -> "PolicyEngine":
+        self.policies.append(policy)
+        return self
+
+    def admit(self, tenant, calls) -> float:
+        """Run every ``on_submit`` hook; returns the delay (seconds) the
+        submitter must pay, 0.0 for immediate admission. Raises
+        :class:`QosReject` if any policy refuses."""
+        delay = 0.0
+        for p in self.policies:
+            d = p.on_submit(tenant, calls)
+            if d is not None:
+                delay = max(delay, float(d))
+        return delay
+
+    def overflow_policy(self, tenant, overflow: int) -> str | None:
+        for p in self.policies:
+            o = p.on_full(tenant, overflow)
+            if o is not None:
+                return o
+        return None
+
+    def reaped(self, tenant, entries) -> None:
+        for p in self.policies:
+            p.on_reap(tenant, entries)
+
+    def closed(self, tenant) -> None:
+        for p in self.policies:
+            p.on_close(tenant)
+
+    def order(self, members) -> list:
+        """Sort poll-group members (objects with a ``.tenant`` attribute)
+        into visit order; members without a tenant keep neutral keys."""
+        if not self.policies:
+            return list(members)
+
+        def key(m):
+            t = m.tenant
+            if t is None:
+                return tuple(0 for _ in self.policies)
+            return tuple(
+                k if (k := p.order_key(t)) is not None else 0
+                for p in self.policies)
+
+        return sorted(members, key=key)
+
+    def quantum(self, tenant, default: int) -> int:
+        q = int(default)
+        if tenant is not None:
+            for p in self.policies:
+                pq = p.quantum(tenant, default)
+                if pq is not None:
+                    q = min(q, int(pq))
+        return max(1, q)
+
+
+class TokenBucket(Policy):
+    """Submission-side rate limiting: each tenant refills
+    ``tenant.rate_limit`` tokens/second up to ``tenant.burst``, one token
+    per call. Tenants without a ``rate_limit`` are unlimited.
+
+    ``mode="throttle"`` (default) admits into debt and returns the time
+    until the bucket is whole again — the submitter sleeps, which paces a
+    flooder to its configured rate. ``mode="reject"`` refuses (and does
+    not charge) submissions the bucket cannot cover.
+
+    ``sysno_rates={sysno: (rate, burst)}`` adds per-sysno buckets on top
+    (e.g. cap SENDTO independently of PREAD64), charged per tenant.
+    """
+
+    def __init__(self, *, sysno_rates=None, mode: str = "throttle"):
+        if mode not in ("throttle", "reject"):
+            raise ValueError(f"mode must be throttle|reject, got {mode!r}")
+        self.mode = mode
+        self.sysno_rates = {int(k): (float(r), float(b))
+                            for k, (r, b) in (sysno_rates or {}).items()}
+        self._lock = threading.Lock()
+        self._buckets: dict = {}    # key -> [tokens, last_refill_monotonic]
+
+    def _refilled(self, key, rate: float, burst: float, now: float) -> float:
+        tokens, stamp = self._buckets.get(key, (burst, now))
+        return min(burst, tokens + (now - stamp) * rate)
+
+    def on_submit(self, tenant, calls):
+        n = len(calls)
+        # two-phase: plan every involved bucket's charge first, commit
+        # only if the whole submission is admitted — a reject must not
+        # leak tokens out of sibling buckets (nothing was submitted)
+        plan: list[tuple] = []      # (key, need, rate, burst)
+        if getattr(tenant, "rate_limit", None):
+            rate = float(tenant.rate_limit)
+            burst = float(tenant.burst or max(rate, 1.0))
+            plan.append((tenant.name, float(n), rate, burst))
+        for sysno, (rate, burst) in self.sysno_rates.items():
+            k = sum(1 for c in calls if int(c[0]) == sysno)
+            if k:
+                plan.append(((tenant.name, sysno), float(k), rate, burst))
+        if not plan:
+            return None
+        delay = 0.0
+        with self._lock:
+            # clock read under the lock: commits are ordered, so a racing
+            # submitter can never store an older stamp over a newer one
+            # (which would silently destroy refill credit)
+            now = time.monotonic()
+            refilled = [self._refilled(key, rate, burst, now)
+                        for key, _need, rate, burst in plan]
+            if self.mode == "reject":
+                for (key, need, _r, _b), tokens in zip(plan, refilled):
+                    if tokens < need:
+                        for (k2, _n2, r2, b2), t2 in zip(plan, refilled):
+                            self._buckets[k2] = [t2, now]   # refill only
+                        raise QosReject(
+                            f"rate limit: {key} has {tokens:.1f} tokens, "
+                            f"need {need:.0f}")
+            for (key, need, rate, _b), tokens in zip(plan, refilled):
+                tokens -= need
+                self._buckets[key] = [tokens, now]
+                if tokens < 0:
+                    delay = max(delay, -tokens / rate)
+        return delay or None
+
+
+class StrictPriority(Policy):
+    """Reap-side strict priority: pollers visit higher-``priority``
+    tenants first (RTGPU-style — latency-critical tenants are never stuck
+    behind batch tenants in the visit order)."""
+
+    def order_key(self, tenant):
+        return -int(getattr(tenant, "priority", 0))
+
+
+class WeightedFair(Policy):
+    """Weighted-fair-queueing credit accounting per tenant and per sysno.
+
+    Every reaped entry charges ``costs.get(sysno, 1.0) / tenant.weight``
+    of virtual time; pollers visit tenants in ascending vtime, so over any
+    busy interval tenant throughput converges to the weight ratio. The
+    per-(tenant, sysno) cumulative charges are kept in :attr:`charged` —
+    the accounting ledger a billing/debug layer can read.
+
+    The quantum hook scales each visit's pop bound by
+    ``weight / max_weight_seen``: a weight-1 tenant next to a weight-32
+    tenant contributes at most ``batch_max/32`` entries of head-of-line
+    blocking per visit.
+    """
+
+    def __init__(self, costs=None):
+        self.costs = {int(k): float(v) for k, v in (costs or {}).items()}
+        self._lock = threading.Lock()
+        self.vtime: dict[str, float] = {}
+        self.charged: dict[str, dict[int, float]] = {}
+        self._weights: dict[str, float] = {}   # live tenants' weights
+
+    def order_key(self, tenant):
+        with self._lock:
+            return self.vtime.get(tenant.name, 0.0)
+
+    def quantum(self, tenant, default: int):
+        w = float(getattr(tenant, "weight", 1.0))
+        with self._lock:
+            self._weights[tenant.name] = w
+            # max over *live* tenants: a closed heavyweight must not keep
+            # everyone else's quantum shrunken forever
+            ratio = w / max(max(self._weights.values()), 1.0)
+        return max(1, int(default * ratio))
+
+    def on_close(self, tenant) -> None:
+        with self._lock:
+            self._weights.pop(tenant.name, None)
+            self.vtime.pop(tenant.name, None)
+            self.charged.pop(tenant.name, None)
+
+    def on_reap(self, tenant, entries) -> None:
+        w = max(float(getattr(tenant, "weight", 1.0)), 1e-9)
+        with self._lock:
+            ledger = self.charged.setdefault(tenant.name, {})
+            cost = 0.0
+            for _slot, _ud, _fl, sysno in entries:
+                c = self.costs.get(sysno, 1.0)
+                cost += c
+                ledger[sysno] = ledger.get(sysno, 0.0) + c
+            # WFQ vtime clamp, applied on a tenant's FIRST charge only: a
+            # tenant created late starts from the lagging incumbent's
+            # vtime, not from zero — otherwise it would monopolize the
+            # pollers until it "caught up" with incumbents' historic
+            # charges. Continuously-active tenants are never clamped, so
+            # a laggard keeps the preference it legitimately earned.
+            if tenant.name in self.vtime:
+                base = self.vtime[tenant.name]
+            else:
+                others = list(self.vtime.values())
+                base = min(others) if others else 0.0
+            self.vtime[tenant.name] = base + cost / w
+
+
+@dataclass
+class SchedStats:
+    rounds: int = 0             # poll rounds (one order evaluation each)
+    served_bundles: int = 0
+    served_entries: int = 0
+    idle_rounds: int = 0
+    parks: int = 0              # times the group armed wakeups and slept
+    wakeups: int = 0            # parks ended by a submitter's edge wakeup
+    per_tenant: dict = field(default_factory=dict)   # name -> entries reaped
+
+
+class _Member:
+    __slots__ = ("ring", "tenant")
+
+    def __init__(self, ring, tenant=None):
+        self.ring = ring
+        self.tenant = tenant
+
+
+class PollerGroup:
+    """N poller threads reaping M rings in QoS order.
+
+    The multi-tenant successor of the single-ring ``RingPoller``: each
+    round a poller asks the :class:`PolicyEngine` for the tenant visit
+    order, pops at most one *quantum* of SQEs from the first non-empty
+    ring, dispatches them (worker handoff or inline), charges the reap
+    hooks, and re-evaluates — so priority/vtime changes take effect at
+    quantum granularity. With no engine the order is round-robin and the
+    quantum is each ring's ``batch_max`` (exactly the old behaviour).
+    """
+
+    def __init__(self, rings=(), *, n_pollers: int = 1, spin_polls: int = 64,
+                 max_sleep_s: float = 0.002, engine: PolicyEngine | None = None,
+                 inline: bool = False, name: str = "genesys-sched"):
+        self.engine = engine
+        self.inline = bool(inline)
+        self.n_pollers = max(1, int(n_pollers))
+        self.spin_polls = max(1, int(spin_polls))
+        self.max_sleep_s = float(max_sleep_s)
+        self.name = name
+        self.stats = SchedStats()
+        self._stats_lock = threading.Lock()
+        self._members: list[_Member] = []
+        self._members_lock = threading.Lock()
+        self._rr = 0
+        self._wakeup = threading.Event()
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        if hasattr(rings, "pop_entries"):    # a single ring, not an iterable
+            rings = (rings,)
+        for r in rings:
+            self.add(r)
+
+    # -- membership -----------------------------------------------------------
+    def add(self, ring, tenant=None) -> None:
+        """Register a ring (optionally owned by a tenant). The ring's
+        SQPOLL wakeup is re-pointed at this group's shared event so any
+        submitter's empty->nonempty edge wakes a parked poller."""
+        ring._wakeup = self._wakeup
+        with self._members_lock:
+            self._members.append(_Member(ring, tenant))
+        self._wakeup.set()      # running pollers re-snapshot next round
+
+    def remove(self, ring) -> None:
+        with self._members_lock:
+            self._members = [m for m in self._members if m.ring is not ring]
+
+    def _snapshot(self) -> list[_Member]:
+        with self._members_lock:
+            return list(self._members)
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> None:
+        if self._threads:
+            return
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(target=self._loop, name=f"{self.name}-poll-{i}",
+                             daemon=True)
+            for i in range(self.n_pollers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for m in self._snapshot():
+            with m.ring._sq_lock:
+                m.ring._need_wakeup = False
+        self._wakeup.set()
+        for t in self._threads:
+            t.join(timeout=2)
+        self._threads = []
+
+    # -- the poll loop --------------------------------------------------------
+    def _poll_once(self) -> int:
+        """One round: visit members in policy order, reap one quantum from
+        the first non-empty ring. Returns entries reaped (0 = idle)."""
+        members = self._snapshot()
+        if not members:
+            return 0
+        if self.engine is not None and self.engine.policies:
+            ordered = self.engine.order(members)
+        else:
+            i = self._rr % len(members)
+            self._rr += 1                   # benign race: any rotation works
+            ordered = members[i:] + members[:i]
+        for m in ordered:
+            default_q = m.ring.batch_max
+            q = (self.engine.quantum(m.tenant, default_q)
+                 if self.engine is not None else default_q)
+            entries = m.ring.pop_entries(q)
+            if not entries:
+                m.ring.stats.empty_polls += 1   # unlocked, like the counter
+                continue                        # churn it replaces
+            m.ring.dispatch_entries(entries, inline=self.inline)
+            if self.engine is not None and m.tenant is not None:
+                self.engine.reaped(m.tenant, entries)
+            n = len(entries)
+            with self._stats_lock:
+                self.stats.served_bundles += 1
+                self.stats.served_entries += n
+                if m.tenant is not None:
+                    pt = self.stats.per_tenant
+                    pt[m.tenant.name] = pt.get(m.tenant.name, 0) + n
+                    m.tenant.stats.reaped += n
+            return n
+        return 0
+
+    def _loop(self) -> None:
+        idle = 0
+        while not self._stop.is_set():
+            n = self._poll_once()
+            with self._stats_lock:
+                self.stats.rounds += 1
+                if n == 0:
+                    self.stats.idle_rounds += 1
+            if n:
+                idle = 0
+                continue
+            idle += 1
+            if idle < self.spin_polls:
+                time.sleep(0)          # busy-poll phase: just yield the GIL
+                continue
+            # adaptive park: arm every ring's need_wakeup, sleep on the
+            # shared event until a submitter's edge wakeup (or a bounded
+            # timeout, so shutdown and membership races stay safe)
+            members = self._snapshot()
+            self._wakeup.clear()
+            armed = True
+            for m in members:
+                with m.ring._sq_lock:
+                    if m.ring._sq_tail != m.ring._sq_head:
+                        armed = False      # raced: work arrived; don't park
+                        break
+                    m.ring._need_wakeup = True
+            if not armed:
+                for m in members:
+                    with m.ring._sq_lock:
+                        m.ring._need_wakeup = False
+                idle = 0
+                continue
+            with self._stats_lock:
+                self.stats.parks += 1
+            if self._wakeup.wait(timeout=self.max_sleep_s):
+                with self._stats_lock:
+                    self.stats.wakeups += 1
+            for m in members:
+                with m.ring._sq_lock:
+                    m.ring._need_wakeup = False
+            idle = 0
+
+
+class RingPoller(PollerGroup):
+    """Single-ring, single-thread poller — the original ``genesys.uring``
+    reaper, kept as the degenerate :class:`PollerGroup`."""
+
+    def __init__(self, ring, *, spin_polls: int = 64,
+                 max_sleep_s: float = 0.002):
+        super().__init__(ring, n_pollers=1, spin_polls=spin_polls,
+                         max_sleep_s=max_sleep_s, name="genesys-uring")

@@ -44,6 +44,11 @@ class Sys(IntEnum):
     # pure-overhead call (returns arg0): the echo microbenchmark floor for
     # the doorbell-vs-ring studies (benchmarks/fig8_uring.py)
     ECHO = 1000
+    # registered-buffer variants (io_uring READ_FIXED analogue): the buffer
+    # argument is an index into the table pinned by Genesys.register_buffers,
+    # skipping the per-call HostHeap lock/dict resolve on the hot path
+    PREAD64_FIXED = 1001
+    RECVFROM_FIXED = 1002
 
 
 # dispatch() is on every worker's hot path: resolve names without a per-call
@@ -64,6 +69,17 @@ class SyscallTable:
         self._sockets: dict[int, socket.socket] = {}
         self.stats: dict[str, int] = {}
         self._stats_lock = threading.Lock()   # dispatch runs on all workers
+        # registered buffers: append-only index table; reads are lock-free
+        # (list indexing is atomic under the GIL), which is the whole point
+        self._fixed: list = []
+        self._fixed_lock = threading.Lock()
+
+    def register_fixed(self, buf) -> int:
+        """Pin a buffer into the fixed-buffer table; returns its index
+        (the *_FIXED syscalls' buffer argument)."""
+        with self._fixed_lock:
+            self._fixed.append(buf)
+            return len(self._fixed) - 1
 
     def register(self, no: int, fn: Handler) -> None:
         self._handlers[int(no)] = fn
@@ -116,6 +132,13 @@ class SyscallTable:
         np.asarray(buf)[dst_off:dst_off + n] = np.frombuffer(data, dtype=np.uint8)
         return n
 
+    def _sys_pread_fixed(self, fd, buf_idx, count, offset, dst_off=0, *_):
+        buf = self._fixed[buf_idx]     # registered buffer: no heap resolve
+        data = os.pread(fd, count, offset)
+        n = len(data)
+        np.asarray(buf)[dst_off:dst_off + n] = np.frombuffer(data, dtype=np.uint8)
+        return n
+
     def _sys_pwrite(self, fd, buf_h, count, offset, src_off=0, *_):
         buf = self.heap.resolve(buf_h)
         view = np.asarray(buf)[src_off:src_off + count].tobytes()
@@ -144,6 +167,14 @@ class SyscallTable:
         s = self._sockets[fd]
         data, _addr = s.recvfrom(count)
         buf = self.heap.resolve(buf_h)
+        n = len(data)
+        np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
+        return n
+
+    def _sys_recvfrom_fixed(self, fd, buf_idx, count, *_):
+        s = self._sockets[fd]
+        data, _addr = s.recvfrom(count)
+        buf = self._fixed[buf_idx]     # registered buffer: no heap resolve
         n = len(data)
         np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
         return n
@@ -196,4 +227,6 @@ def make_default_table(heap: HostHeap | None = None,
     t.register(Sys.GETRUSAGE, t._sys_getrusage)
     t.register(Sys.CLOCK_GETTIME, t._sys_clock_gettime)
     t.register(Sys.ECHO, t._sys_echo)
+    t.register(Sys.PREAD64_FIXED, t._sys_pread_fixed)
+    t.register(Sys.RECVFROM_FIXED, t._sys_recvfrom_fixed)
     return t

@@ -1,0 +1,132 @@
+"""genesys.tenant: a tenant's private syscall ring + QoS identity.
+
+A :class:`Tenant` bundles the three things the scheduler needs to isolate
+one workload from another:
+
+  * a private :class:`~repro.core.genesys.uring.SyscallRing` over a carved
+    partition of the shared :class:`~repro.core.genesys.area.SyscallArea`
+    (:meth:`SyscallArea.carve`) — slot exhaustion and SQ backpressure are
+    per-tenant, so a flooding tenant jams only its own ring;
+  * QoS parameters the shipped policies read: ``weight`` (WFQ share),
+    ``priority`` (strict-priority reap order), ``rate_limit``/``burst``
+    (token-bucket admission);
+  * per-tenant :class:`TenantStats` so throttling and reap accounting are
+    attributable.
+
+Every submission runs the :class:`~repro.core.genesys.sched.PolicyEngine`'s
+``on_submit`` hooks first (sleep the returned delay = throttle; raise
+:class:`~repro.core.genesys.sched.QosReject` = refuse), and consults
+``on_full`` when its SQ lacks space. Completion semantics are the ring's:
+Completion futures, optional CQEs, out-of-order reap, and the shared
+executor ``drain()`` barrier all behave exactly as on the global ring.
+
+Construct tenants through :meth:`Genesys.tenant`, which carves the
+partition, registers the ring with the shared
+:class:`~repro.core.genesys.sched.PollerGroup`, and wires the engine.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.genesys.area import SyscallArea
+from repro.core.genesys.completion import Completion
+from repro.core.genesys.sched import PolicyEngine, QosReject
+from repro.core.genesys.uring import SyscallRing
+
+
+@dataclass
+class TenantStats:
+    submitted: int = 0          # calls that entered this tenant's ring
+    throttled: int = 0          # calls that paid a QoS admission delay
+    throttle_s: float = 0.0     # total admission delay slept
+    rejected: int = 0           # calls refused by a policy (QosReject)
+    sq_full_events: int = 0     # submissions that hit a full SQ
+    reaped: int = 0             # entries pulled off the SQ by pollers
+    per_sysno: dict = field(default_factory=dict)   # sysno -> submitted
+
+
+class Tenant:
+    """One workload's identity on the scheduler: ring + QoS knobs + stats."""
+
+    def __init__(self, name: str, ring: SyscallRing, *,
+                 weight: float = 1.0, priority: int = 0,
+                 rate_limit: float | None = None, burst: float | None = None,
+                 engine: PolicyEngine | None = None):
+        self.name = str(name)
+        self.ring = ring
+        self.area: SyscallArea = ring.area       # the carved partition
+        self.weight = float(weight)
+        self.priority = int(priority)
+        self.rate_limit = rate_limit
+        self.burst = burst
+        self.engine = engine if engine is not None else PolicyEngine()
+        self.stats = TenantStats()
+        # submit() may be called from many threads; counters are
+        # read-modify-write (same discipline as ExecutorStats/RingStats)
+        self._stats_lock = threading.Lock()
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
+               sq_full: str | None = None) -> list[Completion]:
+        """Submit ``(sysno, *args)`` calls through the QoS hooks, then the
+        tenant's ring. Raises :class:`QosReject` (nothing submitted) if a
+        policy refuses; sleeps the admission delay if one throttles.
+
+        ``sq_full=None`` lets the engine's ``on_full`` hook pick the
+        backpressure policy when the SQ lacks space (default ``"spin"``).
+        """
+        if not calls:
+            return []
+        n = len(calls)
+        try:
+            delay = self.engine.admit(self, calls)
+        except QosReject:
+            with self._stats_lock:
+                self.stats.rejected += n
+            raise
+        if delay > 0:
+            with self._stats_lock:
+                self.stats.throttled += n
+                self.stats.throttle_s += delay
+            time.sleep(delay)
+        if sq_full is None:
+            sq_full = "spin"
+            deficit = n - self.ring.sq_space()
+            if deficit > 0:
+                with self._stats_lock:
+                    self.stats.sq_full_events += 1
+                sq_full = self.engine.overflow_policy(self, deficit) or "spin"
+        comps = self.ring.submit_many(calls, want_cqe=want_cqe, hw_id=hw_id,
+                                      sq_full=sq_full)
+        with self._stats_lock:
+            self.stats.submitted += n
+            per = self.stats.per_sysno
+            for c in calls:
+                s = int(c[0])
+                per[s] = per.get(s, 0) + 1
+        return comps
+
+    def call(self, sysno: int, *args, hw_id: int = 0,
+             timeout: float | None = None) -> int:
+        """One syscall through the tenant ring; blocks on its Completion."""
+        return self.submit([(sysno, *args)], hw_id=hw_id)[0].result(
+            timeout=timeout)
+
+    # -- reaping ---------------------------------------------------------------
+    def reap(self, max_n: int = 64, timeout: float | None = None
+             ) -> list[tuple[int, int]]:
+        """Drain up to ``max_n`` of this tenant's CQEs (completion order)."""
+        return self.ring.reap(max_n, timeout=timeout)
+
+    def close(self) -> None:
+        """Flush SQEs still sitting in this tenant's SQ onto the worker
+        pool. NOTE: this does not deregister the tenant — use
+        :meth:`Genesys.close_tenant`, which also detaches the ring from
+        the shared poller group and reclaims the slot partition."""
+        self.ring.close()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Tenant({self.name!r}, w={self.weight}, "
+                f"prio={self.priority}, rate={self.rate_limit})")

@@ -5,7 +5,8 @@ The paper's CPU path (§5) takes a doorbell interrupt per syscall and turns
 it into a work-queue task; §6 measures the latency/throughput trade-off of
 coalescing those interrupts. This module is the io_uring-shaped answer to
 the same bottleneck: the device posts submission-queue entries (SQEs) into
-a fixed-capacity shared-memory ring, and a host-side :class:`RingPoller`
+a fixed-capacity shared-memory ring, and a host-side poller (a
+single-member :class:`~repro.core.genesys.sched.PollerGroup`)
 discovers them by polling — no per-call doorbell, no per-call queue hop.
 
 Layout (mirrors io_uring, adapted to the GENESYS slot area):
@@ -67,8 +68,8 @@ class RingStats:
     sq_full_spins: int = 0      # times a submitter had to spin for space
     bundles: int = 0            # batches handed to the executor
     polls: int = 0              # non-empty SQ polls
-    empty_polls: int = 0
-    wakeups: int = 0            # times the parked poller was woken
+    empty_polls: int = 0        # poller visits that found the SQ empty
+    # (park/wakeup counts live on the poller: sched.SchedStats.wakeups)
     batch_hist: dict = field(default_factory=dict)
 
     def mean_batch(self) -> float:
@@ -91,14 +92,16 @@ class _RingBatch:
 
     def __init__(self, ring: SyscallRing, entries):
         self.ring = ring
-        self.entries = entries           # list of (slot, user_data, flags)
+        self.entries = entries      # list of (slot, user_data, flags, sysno)
 
     def __len__(self) -> int:
         return len(self.entries)
 
     def process(self, ex: Executor) -> None:
         ring = self.ring
-        area, table = ex.area, ex.table
+        # the ring's area, not the executor's: tenant rings run over a
+        # carved partition whose slots must retire to their own free list
+        area, table = ring.area, ex.table
         slots = [e[0] for e in self.entries]
         n = len(slots)
         try:
@@ -144,10 +147,13 @@ class SyscallRing:
         self.batch_max = max(1, int(batch_max))
         self.cq = CompletionQueue(cq_depth)
         self.stats = RingStats()
-        # SQ ring: slot index + user_data + flags per entry ("shared memory")
+        # SQ ring: slot index + user_data + flags + sysno per entry
+        # ("shared memory"; sysno rides along so pollers can do per-sysno
+        # QoS cost accounting without touching the slot area)
         self._sq_slot = np.full(self.sq_depth, -1, dtype=np.int64)
         self._sq_ud = np.zeros(self.sq_depth, dtype=np.int64)
         self._sq_flags = np.zeros(self.sq_depth, dtype=np.uint32)
+        self._sq_sysno = np.zeros(self.sq_depth, dtype=np.int64)
         self._sq_head = 0           # consumer (poller), monotonic
         self._sq_tail = 0           # producer (device side), monotonic
         self._sq_lock = threading.Lock()
@@ -161,10 +167,16 @@ class SyscallRing:
         self._comp_lock = threading.Lock()
         self._comp_cond = threading.Condition()
         self._stats_lock = threading.Lock()   # submitter-side counters
-        self.poller = RingPoller(self, spin_polls=spin_polls,
-                                 max_sleep_s=max_sleep_s)
+        # the reaper is a single-member PollerGroup (genesys.sched); tenant
+        # rings pass start_poller=False and are reaped by a shared group
+        # instead, so they get no private poller at all
         if start_poller:
+            from repro.core.genesys.sched import PollerGroup
+            self.poller = PollerGroup(self, spin_polls=spin_polls,
+                                      max_sleep_s=max_sleep_s)
             self.poller.start()
+        else:
+            self.poller = None
 
     # -- submission (device side) ---------------------------------------------
     def submit_many(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
@@ -202,7 +214,7 @@ class SyscallRing:
                       for i in range(len(part))]
                 for c in cs:
                     self._completions[c.user_data] = c
-            entries = [(t.slot, ud0 + i, flags)
+            entries = [(t.slot, ud0 + i, flags, part[i][0])
                        for i, t in enumerate(tickets)]
             self._publish(entries, sq_full, spin_timeout_s)
             comps += cs
@@ -235,9 +247,10 @@ class SyscallRing:
         if i < len(entries):
             with self._stats_lock:
                 self.stats.fallback_doorbell += len(entries) - i
-            for slot, ud, fl in entries[i:]:
+            for slot, ud, fl, _sysno in entries[i:]:
                 self.executor.interrupt(
-                    slot, partial(self._complete, ud, bool(fl & SQE_WANT_CQE)))
+                    slot, partial(self._complete, ud, bool(fl & SQE_WANT_CQE)),
+                    area=self.area)
 
     def _sq_push_bulk(self, entries) -> int:
         """Publish as many SQEs as fit, one lock round. Returns count."""
@@ -247,10 +260,11 @@ class SyscallRing:
                     self.sq_depth - (self._sq_tail - self._sq_head))
             for i in range(k):
                 idx = (self._sq_tail + i) % self.sq_depth
-                slot, ud, fl = entries[i]
+                slot, ud, fl, sysno = entries[i]
                 self._sq_slot[idx] = slot
                 self._sq_ud[idx] = ud
                 self._sq_flags[idx] = fl
+                self._sq_sysno[idx] = sysno
             if k:
                 self._sq_tail += k
                 # in-flight from the instant they are visible in the SQ,
@@ -265,43 +279,70 @@ class SyscallRing:
         return k
 
     # -- polling (host side) ---------------------------------------------------
-    def process_pending(self, max_n: int | None = None) -> int:
-        """Pop up to ``max_n`` SQEs and hand them to the executor as one
-        bundle. Returns how many were popped. (The poller's unit of work;
-        also callable directly, e.g. from tests or a caller-owned loop.)"""
+    def pop_entries(self, max_n: int | None = None) -> list:
+        """Pop up to ``max_n`` SQEs off the SQ in one lock round. Returns
+        the raw ``(slot, user_data, flags, sysno)`` entries so a poller can
+        inspect them (per-sysno QoS accounting) before dispatching them via
+        :meth:`dispatch_entries`."""
         max_n = self.batch_max if max_n is None else int(max_n)
         with self._sq_lock:
             n = min(max_n, self._sq_tail - self._sq_head)
             if n == 0:
-                return 0
+                return []
             entries = []
             for i in range(n):
                 idx = (self._sq_head + i) % self.sq_depth
                 entries.append((int(self._sq_slot[idx]),
                                 int(self._sq_ud[idx]),
-                                int(self._sq_flags[idx])))
+                                int(self._sq_flags[idx]),
+                                int(self._sq_sysno[idx])))
                 self._sq_slot[idx] = -1
             self._sq_head += n
         with self._stats_lock:
             self.stats.polls += 1
             self.stats.bundles += 1
             self.stats.batch_hist[n] = self.stats.batch_hist.get(n, 0) + 1
-        self.executor.submit_bundle(_RingBatch(self, entries), counted=True)
-        return n
+        return entries
+
+    def dispatch_entries(self, entries, *, inline: bool = False) -> None:
+        """Run one popped bundle. ``inline=False`` hands it to the executor
+        worker pool (one queue op); ``inline=True`` processes it on the
+        calling thread — io_uring SQPOLL's do-the-work-in-the-poller mode,
+        which keeps a latency tenant's calls out of the shared worker queue
+        entirely (see genesys.sched)."""
+        if not entries:
+            return
+        batch = _RingBatch(self, entries)
+        if inline:
+            ex = self.executor
+            with ex._stats_lock:
+                ex.stats.ring_bundles += 1
+            batch.process(ex)
+        else:
+            self.executor.submit_bundle(batch, counted=True)
+
+    def process_pending(self, max_n: int | None = None, *,
+                        inline: bool = False) -> int:
+        """Pop up to ``max_n`` SQEs and run them as one bundle. Returns how
+        many were popped. (The poller's unit of work; also callable
+        directly, e.g. from tests or a caller-owned loop.)"""
+        entries = self.pop_entries(max_n)
+        self.dispatch_entries(entries, inline=inline)
+        return len(entries)
 
     # -- completion plumbing ---------------------------------------------------
     def _complete_batch(self, entries, rets) -> None:
         """Worker side: resolve a bundle's futures (one registry lock round,
         one condition wakeup) and post its CQEs (one CQ lock round)."""
         with self._comp_lock:
-            comps = [self._completions.pop(ud, None) for _, ud, _ in entries]
+            comps = [self._completions.pop(e[1], None) for e in entries]
         for c, ret in zip(comps, rets):
             if c is not None:
                 c.set_result(ret, notify=False)
         with self._comp_cond:
             self._comp_cond.notify_all()
-        cqes = [(ud, ret) for (_, ud, fl), ret in zip(entries, rets)
-                if fl & SQE_WANT_CQE]
+        cqes = [(e[1], ret) for e, ret in zip(entries, rets)
+                if e[2] & SQE_WANT_CQE]
         self.cq.push_many(cqes)
 
     def _complete(self, ud: int, want_cqe: bool, slot: int, retval: int
@@ -326,73 +367,19 @@ class SyscallRing:
             return self.sq_depth - (self._sq_tail - self._sq_head)
 
     def close(self) -> None:
-        """Stop the poller, then flush any SQEs it never saw onto the
-        worker pool — submissions racing with close() still complete, and
-        a subsequent executor drain()/shutdown() cannot hang on in-flight
-        counts for entries nobody would ever pop."""
-        self.poller.stop()
+        """Stop the private poller (if this ring owns one; rings reaped by
+        a shared PollerGroup must be removed from it by their owner), then
+        flush any SQEs nobody saw onto the worker pool — submissions
+        racing with close() still complete, and a subsequent executor
+        drain()/shutdown() cannot hang on in-flight counts for entries
+        nobody would ever pop."""
+        if self.poller is not None:
+            self.poller.stop()
         while self.process_pending():
             pass
 
 
-class RingPoller:
-    """Host-side poller: busy-polls the SQ, adaptively parks when idle.
-
-    Replaces the paper's doorbell interrupt + top-half handler: discovery
-    of new work is a memory poll, batching falls out of draining whatever
-    accumulated since the last poll (cf. §6 coalescing, without the
-    per-interrupt cost), and the only event-like signalling left is one
-    edge-triggered wakeup per idle period (io_uring SQPOLL semantics).
-    """
-
-    def __init__(self, ring: SyscallRing, *, spin_polls: int = 64,
-                 max_sleep_s: float = 0.002):
-        self.ring = ring
-        self.spin_polls = max(1, int(spin_polls))
-        self.max_sleep_s = float(max_sleep_s)
-        self._stop = threading.Event()
-        self._thread: threading.Thread | None = None
-
-    def start(self) -> None:
-        if self._thread is not None:
-            return
-        self._thread = threading.Thread(target=self._loop,
-                                        name="genesys-uring-poll", daemon=True)
-        self._thread.start()
-
-    def _loop(self) -> None:
-        ring = self.ring
-        idle = 0
-        while not self._stop.is_set():
-            if ring.process_pending() > 0:
-                idle = 0
-                continue
-            ring.stats.empty_polls += 1
-            idle += 1
-            if idle < self.spin_polls:
-                time.sleep(0)          # busy-poll phase: just yield the GIL
-                continue
-            # adaptive sleep: park until a submitter's edge wakeup (or a
-            # bounded timeout, so shutdown and races stay safe)
-            ring._wakeup.clear()
-            with ring._sq_lock:
-                if ring._sq_tail != ring._sq_head:
-                    continue           # raced: work arrived before parking
-                ring._need_wakeup = True
-            if ring._wakeup.wait(timeout=self.max_sleep_s):
-                ring.stats.wakeups += 1
-            with ring._sq_lock:
-                ring._need_wakeup = False
-            idle = 0
-
-    def stop(self) -> None:
-        self._stop.set()
-        self._wake()
-        if self._thread is not None:
-            self._thread.join(timeout=2)
-            self._thread = None
-
-    def _wake(self) -> None:
-        with self.ring._sq_lock:
-            self.ring._need_wakeup = False
-        self.ring._wakeup.set()
+# The host-side poller lives in repro.core.genesys.sched: ``PollerGroup``
+# (N poller threads over M rings, QoS-ordered) replaced the original
+# single-ring ``RingPoller``, which survives there as the one-ring,
+# one-thread special case.

@@ -6,10 +6,15 @@ results immediately" example) several batches ahead, then blocks only on
 the ticket of the batch actually consumed. Straggler mitigation re-issues
 a read that misses its deadline (redundant read, first-completion-wins).
 
-``use_ring=True`` prefetches through the genesys.uring submission ring
-instead: each pread is an SQE whose Completion future is the per-batch
-wait handle — no doorbell interrupt, no FINISHED-slot parking, and the
-slot area never holds slots hostage for in-flight prefetches.
+``use_ring=True`` prefetches through a dedicated genesys.sched ``prefetch``
+tenant: each pread is an SQE on the tenant's private ring (a carved
+partition of the slot area) whose Completion future is the per-batch wait
+handle — no doorbell interrupt, no FINISHED-slot parking, and prefetch
+backlog can neither exhaust the shared slot area nor crowd other tenants'
+(e.g. a serving loop's) syscalls out of the reap order. The tenant is
+deliberately low-priority / low-weight: prefetch is throughput work that
+runs ahead of consumption, so it should lose reap-order ties to
+latency-critical tenants.
 """
 from __future__ import annotations
 
@@ -49,9 +54,14 @@ class GenesysDataLoader:
     def __init__(self, gsys: Genesys, paths: list[str], *, batch: int,
                  seq: int, prefetch_depth: int = 2,
                  straggler_deadline_s: float = 2.0, seed: int = 0,
-                 use_ring: bool = False):
+                 use_ring: bool = False, tenant_name: str = "prefetch"):
         self.gsys = gsys
         self.use_ring = use_ring
+        # dedicated prefetch tenant: private ring/slots, background QoS
+        # (low weight + negative priority: prefetch runs ahead of
+        # consumption, so it should lose reap-order ties)
+        self._tenant = (gsys.tenant(tenant_name, weight=0.5, priority=-1)
+                        if use_ring else None)
         self.paths = list(paths)
         self.batch = batch
         self.seq = seq
@@ -83,9 +93,10 @@ class GenesysDataLoader:
         offset = int(self.rng.integers(0, max_off)) // 4 * 4
         bh = self.gsys.heap.new_buffer(n)
         if self.use_ring:
-            # ring path: the Completion future is the wait handle, so the
-            # slot retires immediately and data ownership rides the CQE
-            c = self.gsys.ring_submit(
+            # tenant ring path: the Completion future is the wait handle,
+            # so the slot retires immediately and data ownership rides the
+            # CQE; QoS hooks (rate limit, WFQ) apply to the prefetch stream
+            c = self._tenant.submit(
                 [(Sys.PREAD64, self._fds[f], bh, n, offset)])[0]
             self._pending.append(_Pending(ticket=None, buf_handle=bh,
                                           issued_at=time.monotonic(),

@@ -3,6 +3,12 @@ syscalls (paper §7.3, generalized to a model server).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
       --port 9111 --batches 4
+
+``--use-ring`` routes the decode loop's recvfrom/sendto through the
+genesys.uring rings end-to-end; ``--tenants`` additionally runs it on
+genesys.sched per-tenant rings (a high-priority receive tenant plus a
+bounded pool of hash-sharded reply tenants) with token-bucket +
+strict-priority + WFQ policies installed.
 """
 from __future__ import annotations
 
@@ -20,10 +26,15 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=4)
     ap.add_argument("--reply-port", type=int, required=True)
     ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--use-ring", action="store_true",
+                    help="decode-loop syscalls via the genesys.uring rings")
+    ap.add_argument("--tenants", action="store_true",
+                    help="per-tenant rings + QoS policies (implies --use-ring)")
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.core.genesys import Genesys, GenesysConfig
+    from repro.core.genesys import (Genesys, GenesysConfig, StrictPriority,
+                                    TokenBucket, WeightedFair)
     from repro.launch.mesh import make_host_mesh
     from repro.models.registry import get_api
     from repro.serving.server import GenesysUdpServer
@@ -33,14 +44,17 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    gsys = Genesys(GenesysConfig(n_workers=2))
+    gsys = Genesys(GenesysConfig(n_workers=2, sched_pollers=2))
+    if args.tenants:
+        gsys.use_policies(TokenBucket(), StrictPriority(), WeightedFair())
     mesh = make_host_mesh()
     rules = rules_for(cfg, mesh)
     api = get_api(cfg)
     params, _ = api.init(jax.random.PRNGKey(0), cfg)
     cache = api.init_cache(cfg, 1, 256)
     serve = jax.jit(make_serve_step(cfg, rules))
-    srv = GenesysUdpServer(gsys, port=args.port)
+    srv = GenesysUdpServer(gsys, port=args.port, use_ring=args.use_ring,
+                           use_tenants=args.tenants)
     with mesh:
         stats = srv.serve_model(serve, params, cache,
                                 n_batches=args.batches,
@@ -48,6 +62,10 @@ def main() -> None:
                                 max_tokens=args.max_tokens)
     print(f"requests={stats.requests} batches={stats.batches} "
           f"tokens={stats.tokens_out} wall={stats.wall_s:.2f}s")
+    if args.tenants:
+        for name, t in sorted(gsys.tenants().items()):
+            print(f"tenant {name}: submitted={t.stats.submitted} "
+                  f"reaped={t.stats.reaped} throttled={t.stats.throttled}")
     srv.close()
     gsys.shutdown()
 

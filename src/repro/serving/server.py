@@ -13,6 +13,15 @@ Two paths, mirroring the paper's comparison:
 genesys.uring rings: receives are ring calls (Completion-future blocking),
 and each reply batch goes out as ONE multi-entry submission whose sends
 complete asynchronously — drain() is the only barrier.
+
+``use_tenants=True`` (implies the ring path) runs the server on
+genesys.sched per-tenant rings: receives go through a high-priority
+``serve-rx`` tenant, and reply traffic is hash-sharded onto a bounded
+pool of ``client-shard:<i>`` tenants (``tx_shards`` of them; the slot
+area is finite, so per-port tenants cannot be unbounded), so one client
+flooding its reply shard cannot starve receives or other shards'
+replies — QoS policies installed via ``Genesys.use_policies`` (token
+bucket, strict priority, WFQ) apply per shard.
 """
 from __future__ import annotations
 
@@ -40,14 +49,29 @@ class GenesysUdpServer:
 
     def __init__(self, gsys: Genesys, *, port: int, max_batch: int = 8,
                  batch_window_s: float = 0.005, payload: int = 4096,
-                 use_ring: bool = False):
+                 use_ring: bool = False, use_tenants: bool = False,
+                 tx_shards: int = 8):
         self.gsys = gsys
         self.port = port
         self.max_batch = max_batch
         self.window = batch_window_s
         self.payload = payload
-        self.use_ring = use_ring
-        self._call = gsys.ring_call if use_ring else gsys.call
+        self.use_tenants = use_tenants
+        self.use_ring = use_ring or use_tenants
+        self.tx_shards = max(1, int(tx_shards))
+        if use_tenants:
+            # receive side: latency-critical tenant, reaped first under
+            # StrictPriority and never stuck behind a client's reply flood
+            self._rx = gsys.tenant("serve-rx", weight=8.0, priority=10)
+            self._call = self._rx.call
+            # reply side: the shard pool is built up front, so the per-
+            # reply hot path is one list index — no Genesys.tenant() lock
+            self._tx = [gsys.tenant(f"client-shard:{i}", n_slots=128)
+                        for i in range(self.tx_shards)]
+        else:
+            self._rx = None
+            self._tx = []
+            self._call = gsys.ring_call if self.use_ring else gsys.call
         self.fd = self._call(Sys.SOCKET, socket.AF_INET, socket.SOCK_DGRAM, 0)
         self._call(Sys.BIND, self.fd, port)
         sock = gsys.table._sockets[self.fd]
@@ -91,7 +115,14 @@ class GenesysUdpServer:
                     np.frombuffer(p, dtype=np.uint8).copy())
                 self._pending_handles.append(bh)
                 calls.append((Sys.SENDTO, self.fd, bh, len(p), port))
-            self.gsys.ring_submit(calls)
+            if self.use_tenants:
+                # per-client tenant, hash-sharded onto the bounded pool:
+                # this port's sends ride their shard's ring, subject to
+                # its rate limit / WFQ share (the slot area is finite, so
+                # one tenant per port would exhaust it under churn)
+                self._tx[port % self.tx_shards].submit(calls)
+            else:
+                self.gsys.ring_submit(calls)
             return
         for p in payloads:
             bh = self.gsys.heap.register(
@@ -127,31 +158,38 @@ class GenesysUdpServer:
         return self.stats
 
     def serve_model(self, serve_fn, params, cache, *, n_batches: int,
-                    reply_port: int, max_tokens: int = 8) -> ServeStats:
+                    reply_port: int, max_tokens: int = 8,
+                    n_requests: int | None = None,
+                    max_idle_polls: int = 50) -> ServeStats:
         """Decode-loop mode: each request's payload is int32 prompt tokens;
-        respond with greedily decoded continuations."""
+        respond with greedily decoded continuations. Stops at whichever
+        bound hits first: ``n_batches`` non-empty batches, ``n_requests``
+        total requests (if given), or ``max_idle_polls`` consecutive empty
+        polls while waiting on ``n_requests`` — so a lost datagram cannot
+        strand the loop forever."""
         t0 = time.monotonic()
         done = 0
+        idle = 0
         cache_len = jnp.zeros((cache_batch_size(cache),), jnp.int32)
-        while done < n_batches:
+        while done < n_batches and (
+                n_requests is None or self.stats.requests < n_requests):
             reqs = self.poll_requests()
             if not reqs:
+                idle += 1
+                if n_requests is not None and idle >= max_idle_polls:
+                    break               # traffic died before the target
                 continue
+            idle = 0
             toks = [np.frombuffer(r.tobytes(), dtype=np.int32) for r in reqs]
-            outs = []
             for t in toks:
-                cur = jnp.asarray(t[-1:]).reshape(1, 1)
-                gen = []
-                cl = cache_len
-                c = cache
-                for _ in range(max_tokens):
-                    nxt, c = serve_fn(params, c, cur, cl[:1])
-                    gen.append(int(nxt[0]))
-                    cur = nxt.reshape(1, 1)
-                    cl = cl + 1
-                outs.append(np.asarray(gen, dtype=np.int32).tobytes())
+                gen = _greedy_decode(serve_fn, params, cache, cache_len, t,
+                                     max_tokens)
+                # reply eagerly, per request: earlier requests in a batch
+                # are not held hostage by later ones' decode steps (the
+                # ring/tenant send is async, so this costs one SQE each)
+                self.reply([np.asarray(gen, dtype=np.int32).tobytes()],
+                           reply_port)
                 self.stats.tokens_out += len(gen)
-            self.reply(outs, reply_port)
             self.stats.requests += len(reqs)
             self.stats.batches += 1
             done += 1
@@ -167,6 +205,22 @@ class GenesysUdpServer:
 def cache_batch_size(cache) -> int:
     leaves = jax.tree_util.tree_leaves(cache)
     return leaves[0].shape[1]
+
+
+def _greedy_decode(serve_fn, params, cache, cache_len, prompt_toks,
+                   max_tokens: int) -> list[int]:
+    """One request's greedy continuation — shared by the GENESYS and CPU
+    servers so the two benchmark paths decode identically."""
+    cur = jnp.asarray(prompt_toks[-1:]).reshape(1, 1)
+    gen: list[int] = []
+    cl = cache_len
+    c = cache
+    for _ in range(max_tokens):
+        nxt, c = serve_fn(params, c, cur, cl[:1])
+        gen.append(int(nxt[0]))
+        cur = nxt.reshape(1, 1)
+        cl = cl + 1
+    return gen
 
 
 class CpuBaselineUdpServer:
@@ -188,6 +242,31 @@ class CpuBaselineUdpServer:
             except socket.timeout:
                 continue
             self.sock.sendto(data, ("127.0.0.1", reply_port))
+            self.stats.requests += 1
+            self.stats.batches += 1
+            done += 1
+        self.stats.wall_s = time.monotonic() - t0
+        return self.stats
+
+    def serve_model(self, serve_fn, params, cache, *, n_batches: int,
+                    reply_port: int, max_tokens: int = 8) -> ServeStats:
+        """The classic host decode loop (Fig 1 left): the CPU owns the
+        socket, babysits the accelerator, one request at a time. The
+        comparison target for GenesysUdpServer.serve_model's ring path."""
+        t0 = time.monotonic()
+        done = 0
+        cache_len = jnp.zeros((cache_batch_size(cache),), jnp.int32)
+        while done < n_batches:
+            try:
+                data, _ = self.sock.recvfrom(self.payload)
+            except socket.timeout:
+                continue
+            t = np.frombuffer(data, dtype=np.int32)
+            gen = _greedy_decode(serve_fn, params, cache, cache_len, t,
+                                 max_tokens)
+            self.sock.sendto(np.asarray(gen, dtype=np.int32).tobytes(),
+                             ("127.0.0.1", reply_port))
+            self.stats.tokens_out += len(gen)
             self.stats.requests += 1
             self.stats.batches += 1
             done += 1

@@ -1,0 +1,631 @@
+"""genesys.sched: area partitions, tenant rings, QoS policy hooks
+(token bucket / strict priority / WFQ), the multi-poller fair reaper,
+and SQ-full backpressure + stats consistency under concurrency."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.genesys import (Genesys, GenesysConfig, Policy, PolicyEngine,
+                                PollerGroup, QosReject, RingFull, SlotState,
+                                StrictPriority, Sys, SyscallArea, SyscallRing,
+                                TokenBucket, WeightedFair)
+from repro.core.genesys.tenant import Tenant
+
+SLEEP_SYS = 900
+
+
+def _register_sleep(g: Genesys) -> None:
+    def _sleep(us, *_):
+        time.sleep(us / 1e6)
+        return us
+    g.table.register(SLEEP_SYS, _sleep)
+
+
+# ---------------------------------------------------------------- partitions --
+
+def test_carve_partition_disjoint_slots():
+    area = SyscallArea(64)
+    part = area.carve(16)
+    assert part.n_slots == 16
+    assert area.in_flight() == 0 and part.in_flight() == 0
+    # exhaust the partition: its 16 slots never collide with the parent's
+    part_tix = [part.acquire(hw_id=1) for _ in range(16)]
+    parent_tix = [area.acquire(hw_id=2) for _ in range(48)]
+    slots = {t.slot for t in part_tix} | {t.slot for t in parent_tix}
+    assert len(slots) == 64                      # all distinct, full area
+    assert part.in_flight() == 16
+    assert area.in_flight() == 48
+    # shared backing array: partition slot state visible via parent
+    assert area.state_of(part_tix[0].slot) == SlotState.POPULATING
+    for t in part_tix:
+        part.transition(t.slot, SlotState.POPULATING, SlotState.FREE)
+        with part._lock:
+            part._free.append(t.slot)
+    for t in parent_tix:
+        area.transition(t.slot, SlotState.POPULATING, SlotState.FREE)
+        with area._lock:
+            area._free.append(t.slot)
+    area.reclaim(part)
+    assert len(area._free) == 64 and area._carved == 0
+
+
+def test_carve_more_than_free_raises():
+    area = SyscallArea(8)
+    area.carve(6)
+    with pytest.raises(ValueError):
+        area.carve(3)
+
+
+def test_reclaim_refuses_inflight_partition():
+    area = SyscallArea(8)
+    part = area.carve(4)
+    t = part.acquire(hw_id=0)
+    with pytest.raises(RuntimeError):
+        area.reclaim(part)
+    part.transition(t.slot, SlotState.POPULATING, SlotState.FREE)
+    with part._lock:
+        part._free.append(t.slot)
+    area.reclaim(part)
+
+
+# ------------------------------------------------------------------- tenants --
+
+def test_tenant_roundtrip_and_stats():
+    g = Genesys(GenesysConfig(sched_pollers=2))
+    try:
+        a = g.tenant("a", weight=4.0, priority=1)
+        b = g.tenant("b")
+        assert g.tenant("a") is a          # idempotent by name
+        comps = a.submit([(Sys.ECHO, i) for i in range(50)])
+        assert [c.result(timeout=10) for c in comps] == list(range(50))
+        assert b.call(Sys.ECHO, 7, timeout=10) == 7
+        assert a.stats.submitted == 50 and a.stats.per_sysno[int(Sys.ECHO)] == 50
+        g.drain()
+        assert a.stats.reaped + a.ring.stats.fallback_doorbell >= 50
+        assert g.sched.stats.served_entries >= 51
+    finally:
+        g.shutdown()
+
+
+def test_tenant_ring_isolation_on_sq_full():
+    """Tenant A jamming its SQ (raise policy) cannot take space from
+    tenant B's ring or the shared area beyond A's partition."""
+    g = Genesys(GenesysConfig(tenant_sq_depth=8, tenant_slots=16))
+    try:
+        a, b = g.tenant("a"), g.tenant("b")
+        g.sched.stop()                     # deterministic: nobody reaps
+        a.submit([(Sys.ECHO, i) for i in range(8)], sq_full="raise")
+        with pytest.raises(RingFull):
+            a.submit([(Sys.ECHO, 99)], sq_full="raise")
+        # B is unaffected by A's jam
+        comps = b.submit([(Sys.ECHO, 5)], sq_full="raise")
+        assert b.ring.sq_space() == 7
+        g.sched.start()
+        assert comps[0].result(timeout=10) == 5
+    finally:
+        g.shutdown()
+
+
+def test_tenant_slot_partition_blocks_only_owner():
+    """Exhausting a tenant's *slot partition* delays only that tenant:
+    submissions beyond the partition block until slots recycle, and the
+    other tenant keeps completing meanwhile."""
+    g = Genesys(GenesysConfig(tenant_slots=8, tenant_sq_depth=64,
+                              sched_pollers=1))
+    _register_sleep(g)
+    try:
+        slow, fast = g.tenant("slow"), g.tenant("fast")
+        done = threading.Event()
+
+        def _flood():
+            comps = slow.submit([(SLEEP_SYS, 2_000)] * 32)  # 4x its slots
+            for c in comps:
+                c.result(timeout=30)
+            done.set()
+
+        th = threading.Thread(target=_flood, daemon=True)
+        th.start()
+        for i in range(20):
+            assert fast.call(Sys.ECHO, i, timeout=10) == i
+        done.wait(30)
+        assert done.is_set()
+        th.join(5)
+    finally:
+        g.shutdown()
+
+
+# ------------------------------------------------------------------ policies --
+
+class _FakeTenant:
+    def __init__(self, name, weight=1.0, priority=0, rate_limit=None,
+                 burst=None):
+        self.name = name
+        self.weight = weight
+        self.priority = priority
+        self.rate_limit = rate_limit
+        self.burst = burst
+
+
+class _M:
+    def __init__(self, tenant):
+        self.tenant = tenant
+
+
+def test_token_bucket_throttles_and_paces():
+    tb = TokenBucket()
+    t = _FakeTenant("t", rate_limit=1000.0, burst=10)
+    calls = [(Sys.ECHO, 0)] * 10
+    assert tb.on_submit(t, calls) is None          # burst covers it
+    d = tb.on_submit(t, calls)                     # now 10 in debt
+    assert d is not None and 0.005 < d < 0.05      # ~10/1000 = 10ms
+    unlimited = _FakeTenant("u")
+    assert tb.on_submit(unlimited, calls) is None
+
+
+def test_token_bucket_reject_mode_refunds():
+    tb = TokenBucket(mode="reject")
+    t = _FakeTenant("t", rate_limit=100.0, burst=4)
+    assert tb.on_submit(t, [(Sys.ECHO, 0)] * 4) is None
+    with pytest.raises(QosReject):
+        tb.on_submit(t, [(Sys.ECHO, 0)] * 4)
+    # the rejected submission was not charged: one call still fits after
+    # a tiny refill window
+    time.sleep(0.02)
+    assert tb.on_submit(t, [(Sys.ECHO, 0)]) is None
+
+
+def test_token_bucket_per_sysno():
+    tb = TokenBucket(sysno_rates={int(Sys.SENDTO): (10.0, 2.0)})
+    t = _FakeTenant("t")
+    assert tb.on_submit(t, [(Sys.ECHO, 0)] * 100) is None   # not limited
+    assert tb.on_submit(t, [(int(Sys.SENDTO), 0)] * 2) is None
+    d = tb.on_submit(t, [(int(Sys.SENDTO), 0)] * 2)
+    assert d is not None and d > 0.05               # 2 tokens / 10 per s
+
+
+def test_token_bucket_reject_does_not_leak_sibling_buckets():
+    """A per-sysno rejection must not leave the tenant-level bucket
+    poorer: nothing was submitted, nothing may be charged."""
+    tb = TokenBucket(mode="reject",
+                     sysno_rates={int(Sys.SENDTO): (10.0, 1.0)})
+    t = _FakeTenant("t", rate_limit=1000.0, burst=10)
+    for _ in range(5):                     # repeated rejected attempts
+        with pytest.raises(QosReject):
+            tb.on_submit(t, [(int(Sys.SENDTO), 0)] * 2)
+    # tenant bucket still whole: a full-burst ECHO submission is admitted
+    assert tb.on_submit(t, [(Sys.ECHO, 0)] * 10) is None
+
+
+def test_wfq_late_tenant_starts_at_incumbent_floor():
+    """A tenant created after incumbents have accumulated vtime must not
+    get unbounded preference: its first charge starts from the lagging
+    incumbent's vtime, while an active laggard keeps its earned edge."""
+    wfq = WeightedFair()
+    a = _FakeTenant("a")
+    wfq.on_reap(a, [(0, 1, 0, 0)] * 100)       # incumbent at vtime 100
+    b = _FakeTenant("b")
+    wfq.on_reap(b, [(0, 1, 0, 0)])             # late joiner's first charge
+    assert wfq.vtime["b"] == pytest.approx(101.0)
+    # active laggard is NOT clamped forward on subsequent charges
+    wfq.on_reap(b, [(0, 1, 0, 0)])
+    assert wfq.vtime["b"] == pytest.approx(102.0)
+
+
+def test_wfq_max_weight_shrinks_when_tenant_closes():
+    """Closing a heavyweight tenant restores lighter tenants' quanta."""
+    wfq = WeightedFair()
+    big = _FakeTenant("big", weight=64.0)
+    small = _FakeTenant("small", weight=1.0)
+    assert wfq.quantum(big, 64) == 64
+    assert wfq.quantum(small, 64) == 1
+    wfq.on_close(big)
+    assert wfq.quantum(small, 64) == 64    # small is the heaviest now
+
+
+def test_strict_priority_and_wfq_order():
+    engine = PolicyEngine([StrictPriority(), WeightedFair()])
+    hi = _FakeTenant("hi", weight=1.0, priority=5)
+    lo = _FakeTenant("lo", weight=8.0, priority=0)
+    ms = [_M(lo), _M(hi)]
+    assert [m.tenant.name for m in engine.order(ms)] == ["hi", "lo"]
+    # same priority: WFQ vtime tie-breaks — charge "a" and it sorts last
+    wfq = WeightedFair(costs={int(Sys.ECHO): 2.0})
+    engine2 = PolicyEngine([wfq])
+    a = _FakeTenant("a", weight=2.0)
+    b = _FakeTenant("b", weight=2.0)
+    wfq.on_reap(a, [(0, 1, 0, int(Sys.ECHO))] * 3)
+    assert [m.tenant.name for m in engine2.order([_M(a), _M(b)])] == ["a", "b"][::-1]
+    # per-tenant per-sysno credit ledger
+    assert wfq.charged["a"][int(Sys.ECHO)] == 6.0
+    assert wfq.vtime["a"] == pytest.approx(3.0)     # 6 cost / weight 2
+
+
+def test_wfq_quantum_scales_with_weight():
+    wfq = WeightedFair()
+    big = _FakeTenant("big", weight=32.0)
+    small = _FakeTenant("small", weight=1.0)
+    assert wfq.quantum(big, 64) == 64
+    assert wfq.quantum(small, 64) == 2              # 64 * 1/32
+    engine = PolicyEngine([wfq])
+    assert engine.quantum(small, 64) == 2
+    assert engine.quantum(None, 64) == 64
+
+
+def test_on_full_hook_overrides_backpressure():
+    class ForceRaise(Policy):
+        def on_full(self, tenant, overflow):
+            return "raise"
+
+    g = Genesys(GenesysConfig(tenant_sq_depth=4))
+    try:
+        g.use_policies(ForceRaise())
+        t = g.tenant("t")
+        g.sched.stop()
+        t.submit([(Sys.ECHO, i) for i in range(4)])
+        with pytest.raises(RingFull):
+            t.submit([(Sys.ECHO, 9)])               # sq_full=None -> hook
+        assert t.stats.sq_full_events == 1
+        g.sched.start()
+    finally:
+        g.shutdown()
+
+
+def test_tenant_throttle_and_reject_stats():
+    g = Genesys(GenesysConfig())
+    try:
+        g.use_policies(TokenBucket(mode="reject"))
+        t = g.tenant("t", rate_limit=50.0, burst=5)
+        t.submit([(Sys.ECHO, 0)] * 5)
+        with pytest.raises(QosReject):
+            t.submit([(Sys.ECHO, 0)] * 5)
+        assert t.stats.rejected == 5
+        assert t.stats.submitted == 5
+        g.drain()
+    finally:
+        g.shutdown()
+
+
+# -------------------------------------------------------------- poller group --
+
+def test_poller_group_multi_poller_parks_and_wakes():
+    g = Genesys(GenesysConfig(sched_pollers=3, ring_max_sleep_s=0.001))
+    try:
+        ts = [g.tenant(f"t{i}") for i in range(3)]
+        time.sleep(0.05)                    # let pollers go idle and park
+        comps = []
+        for rounds in range(20):
+            for t in ts:
+                comps += t.submit([(Sys.ECHO, rounds)])
+            time.sleep(0.002)
+        assert [c.result(timeout=10) for c in comps] == [r for r in range(20)
+                                                         for _ in range(3)]
+        st = g.sched.stats
+        assert st.parks > 0                 # pollers parked while idle
+        assert st.served_entries >= 60
+        g.drain()
+    finally:
+        g.shutdown()
+
+
+def test_poller_group_inline_mode():
+    """SQPOLL mode: poller threads dispatch bundles themselves; worker
+    pool stays out of the reap path but stats/drain still hold."""
+    g = Genesys(GenesysConfig(sched_pollers=2, sched_inline=True))
+    try:
+        t = g.tenant("t")
+        comps = t.submit([(Sys.ECHO, i) for i in range(100)])
+        assert [c.result(timeout=10) for c in comps] == list(range(100))
+        g.drain()
+        assert g.executor.stats.ring_processed >= 100
+    finally:
+        g.shutdown()
+
+
+def test_single_ring_uses_poller_group():
+    """The plain Genesys.ring path now reaps through a single-member
+    PollerGroup — behaviour (including parking) is unchanged."""
+    g = Genesys(GenesysConfig())
+    try:
+        assert isinstance(g.ring.poller, PollerGroup)
+        assert g.ring_call(Sys.ECHO, 3) == 3
+    finally:
+        g.shutdown()
+
+
+def test_wfq_share_under_contention():
+    """With one inline poller and two saturated tenant rings, reap share
+    converges toward the 3:1 WFQ weight ratio."""
+    g = Genesys(GenesysConfig(sched_pollers=1, sched_inline=True,
+                              tenant_sq_depth=512, tenant_slots=512))
+    _register_sleep(g)
+    try:
+        g.use_policies(WeightedFair())
+        heavy = g.tenant("heavy", weight=3.0)
+        light = g.tenant("light", weight=1.0)
+        g.sched.stop()
+        ch = heavy.submit([(SLEEP_SYS, 1000)] * 120)
+        cl = light.submit([(SLEEP_SYS, 1000)] * 120)
+        g.sched.start()
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            if heavy.stats.reaped + light.stats.reaped >= 80:
+                break
+            time.sleep(0.005)
+        h, l = heavy.stats.reaped, light.stats.reaped
+        assert h + l >= 80
+        assert h >= l                      # heavier tenant reaps at least as much
+        for c in ch + cl:
+            c.result(timeout=60)
+    finally:
+        g.shutdown()
+
+
+def test_close_tenant_reclaims_partition():
+    """Tenant churn must not leak slots: close_tenant flushes, detaches
+    from the poller group, and returns the partition to the area."""
+    g = Genesys(GenesysConfig(n_slots=1024, tenant_slots=256))
+    try:
+        free0 = len(g.area._free)
+        for i in range(10):                # > n_slots/tenant_slots rounds
+            t = g.tenant(f"t{i}")
+            comps = t.submit([(Sys.ECHO, i)] * 8)
+            assert [c.result(timeout=10) for c in comps] == [i] * 8
+            g.close_tenant(f"t{i}")
+            assert f"t{i}" not in g.tenants()
+        assert len(g.area._free) == free0 and g.area._carved == 0
+        g.close_tenant("never-existed")    # no-op, no raise
+    finally:
+        g.shutdown()
+
+
+def test_tenant_doorbell_fallback_retires_to_partition():
+    """SQ overflow on a tenant ring falls back to the interrupt path; the
+    executor must retire those slots to the tenant's partition free list,
+    not the parent area's (the area-override plumbing)."""
+    g = Genesys(GenesysConfig(tenant_sq_depth=4, tenant_slots=32))
+    try:
+        t = g.tenant("t")
+        g.sched.stop()                     # force overflow: nobody drains
+        comps = t.submit([(Sys.ECHO, i) for i in range(12)],
+                         sq_full="doorbell")
+        assert t.ring.stats.fallback_doorbell == 8
+        assert [c.result(timeout=10) for c in comps[4:]] == list(range(4, 12))
+        g.sched.start()
+        assert [c.result(timeout=10) for c in comps[:4]] == list(range(0, 4))
+        g.drain()
+        assert t.area.in_flight() == 0
+        assert len(t.area._free) == 32     # every slot came home
+        assert g.area.in_flight() == 0
+    finally:
+        g.shutdown()
+
+
+# ---------------------------------------- backpressure & stats under threads --
+
+@pytest.mark.parametrize("policy", ["spin", "doorbell"])
+def test_concurrent_submitters_backpressure(policy):
+    """Many threads hammering a tiny SQ under spin/doorbell policies:
+    every future resolves with its own value, nothing lost or duplicated."""
+    g = Genesys(GenesysConfig(ring_sq_depth=8, ring_batch_max=4))
+    try:
+        results: dict[int, list] = {}
+        errs = []
+
+        def _worker(tid):
+            try:
+                comps = g.ring.submit_many(
+                    [(Sys.ECHO, tid * 1000 + i) for i in range(50)],
+                    sq_full=policy, spin_timeout_s=10.0)
+                results[tid] = [c.result(timeout=30) for c in comps]
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=_worker, args=(t,))
+                   for t in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errs
+        for tid in range(6):
+            assert results[tid] == [tid * 1000 + i for i in range(50)]
+        st = g.ring.stats
+        assert st.submitted + st.fallback_doorbell == 300
+    finally:
+        g.shutdown()
+
+
+def test_concurrent_submitters_raise_policy():
+    """raise policy under concurrency: losers raise RingFull *without
+    submitting anything*; winners' futures all resolve."""
+    g = Genesys(GenesysConfig(ring_sq_depth=16))
+    try:
+        g.ring.poller.stop()               # hold the SQ full deterministically
+        ok, full = [], []
+        lock = threading.Lock()
+
+        def _worker(tid):
+            try:
+                comps = g.ring.submit_many(
+                    [(Sys.ECHO, tid * 100 + i) for i in range(8)],
+                    sq_full="raise")
+                with lock:
+                    ok.append((tid, comps))
+            except RingFull:
+                with lock:
+                    full.append(tid)
+
+        threads = [threading.Thread(target=_worker, args=(t,))
+                   for t in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert len(ok) == 2 and len(full) == 6    # 16-deep SQ fits 2 batches
+        assert g.ring.stats.submitted == 16
+        g.ring.poller.start()
+        for tid, comps in ok:
+            assert [c.result(timeout=10) for c in comps] == \
+                [tid * 100 + i for i in range(8)]
+    finally:
+        g.shutdown()
+
+
+def test_cqe_ring_overflow_semantics():
+    """CQ deeper than depth: overflow goes to the backlog, nothing is
+    dropped, completion order is preserved across the boundary, and the
+    overflow counter reports the spill."""
+    g = Genesys(GenesysConfig(ring_cq_depth=8, ring_batch_max=4))
+    try:
+        comps = g.ring.submit_many([(Sys.ECHO, i) for i in range(40)],
+                                   want_cqe=True)
+        for c in comps:
+            c.result(timeout=10)
+        cq = g.ring.cq
+        assert cq.overflows > 0
+        assert len(cq) == 40
+        got = []
+        while True:
+            batch = g.ring.reap(max_n=7, timeout=0)
+            if not batch:
+                break
+            got += batch
+        assert len(got) == 40
+        assert cq.reaped == 40 and cq.pushed == 40
+        # within one serially-executed bundle CQEs are pushed in order, so
+        # user_data of the first bundle (batch_max=4) comes out ascending
+        uds = [ud for ud, _ in got]
+        assert sorted(uds) == [c.user_data for c in comps]
+    finally:
+        g.shutdown()
+
+
+@pytest.mark.slow
+def test_stats_consistency_across_worker_races():
+    """Regression: ExecutorStats/RingStats counters are lock-protected, so
+    hammering both paths from many threads loses no counts."""
+    g = Genesys(GenesysConfig(n_workers=4, ring_sq_depth=64,
+                              ring_batch_max=8))
+    try:
+        N, T = 200, 6
+
+        def _ring_worker(tid):
+            comps = g.ring.submit_many([(Sys.ECHO, i) for i in range(N)])
+            for c in comps:
+                c.result(timeout=60)
+
+        def _doorbell_worker(tid):
+            for i in range(N // 4):
+                assert g.call(Sys.ECHO, i) == i
+
+        threads = ([threading.Thread(target=_ring_worker, args=(t,))
+                    for t in range(T)] +
+                   [threading.Thread(target=_doorbell_worker, args=(t,))
+                    for t in range(T)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        g.drain()
+        ring_total = T * N
+        door_total = T * (N // 4)
+        st = g.ring.stats
+        assert st.submitted + st.fallback_doorbell == ring_total
+        ex = g.executor.stats
+        assert ex.processed == ring_total + door_total
+        assert ex.ring_processed == ring_total
+        assert sum(st.batch_hist.values()) == st.bundles
+        assert g.area.in_flight() == 0
+    finally:
+        g.shutdown()
+
+
+# ------------------------------------------------------- registered buffers --
+
+def test_registered_buffers_pread_and_recvfrom(gsys, tmp_path):
+    import os
+    import socket as socklib
+    path = str(tmp_path / "fixed.bin")
+    with open(path, "wb") as f:
+        f.write(bytes(range(256)))
+    ph = gsys.heap.register_bytes(path.encode())
+    fd = gsys.call(Sys.OPEN, ph, os.O_RDONLY, 0)
+    bh = gsys.heap.new_buffer(256)
+    [idx] = gsys.register_buffers([bh])
+    assert gsys.ring_call(Sys.PREAD64, fd, bh, 64, 0) == 64
+    assert gsys.ring_call(Sys.PREAD64_FIXED, fd, idx, 64, 64, 64) == 64
+    buf = np.asarray(gsys.heap.resolve(bh))
+    assert bytes(buf[:128].tobytes()) == bytes(range(128))
+    gsys.call(Sys.CLOSE, fd)
+    # recvfrom_fixed against a real UDP socket
+    rfd = gsys.call(Sys.SOCKET, socklib.AF_INET, socklib.SOCK_DGRAM, 0)
+    gsys.call(Sys.BIND, rfd, 0)
+    sock = gsys.table._sockets[rfd]
+    port = sock.getsockname()[1]
+    tx = socklib.socket(socklib.AF_INET, socklib.SOCK_DGRAM)
+    tx.sendto(b"fixed-buffer", ("127.0.0.1", port))
+    assert gsys.ring_call(Sys.RECVFROM_FIXED, rfd, idx, 256) == 12
+    assert bytes(np.asarray(gsys.heap.resolve(bh))[:12].tobytes()) == \
+        b"fixed-buffer"
+    tx.close()
+    gsys.call(Sys.CLOSE, rfd)
+
+
+# -------------------------------------------------------------- integrations --
+
+def test_udp_server_with_tenants_roundtrip(gsys):
+    import socket as socklib
+    from repro.serving.server import GenesysUdpServer
+    srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                           use_tenants=True)
+    port = gsys.table._sockets[srv.fd].getsockname()[1]
+    client = socklib.socket(socklib.AF_INET, socklib.SOCK_DGRAM)
+    client.bind(("127.0.0.1", 0))
+    cport = client.getsockname()[1]
+    client.settimeout(5)
+    th = threading.Thread(
+        target=lambda: srv.serve_echo(n_batches=1, reply_port=cport),
+        daemon=True)
+    th.start()
+    client.sendto(b"tenant-echo", ("127.0.0.1", port))
+    data, _ = client.recvfrom(256)
+    assert data == b"tenant-echo"
+    th.join(5)
+    names = set(gsys.tenants())
+    shard = f"client-shard:{cport % srv.tx_shards}"
+    assert "serve-rx" in names and shard in names
+    assert gsys.tenants()[shard].stats.submitted >= 1
+    srv.close()
+    client.close()
+
+
+def test_udp_server_tenant_pool_is_bounded(gsys):
+    """Client-port churn maps onto the fixed shard pool: no per-port
+    tenant creation, so the slot area cannot be exhausted by churn."""
+    from repro.serving.server import GenesysUdpServer
+    srv = GenesysUdpServer(gsys, port=0, payload=64, use_tenants=True)
+    n0 = len(gsys.tenants())
+    for port in range(20000, 20050):       # 50 distinct "clients"
+        srv.reply([b"x"], port)
+    gsys.drain()
+    srv._release_pending()
+    assert len(gsys.tenants()) == n0       # still just rx + shards
+    assert sum(t.stats.submitted for t in srv._tx) == 50
+    srv.close()
+
+
+def test_loader_uses_prefetch_tenant(gsys, tmp_path):
+    from repro.data.pipeline import GenesysDataLoader, write_token_shard
+    toks = np.arange(10_000, dtype=np.uint32)
+    shard = str(tmp_path / "t.bin")
+    write_token_shard(shard, toks)
+    dl = GenesysDataLoader(gsys, [shard], batch=2, seq=16, prefetch_depth=3,
+                           seed=1, use_ring=True)
+    b = dl.next_batch()
+    assert b["tokens"].shape == (2, 16)
+    t = gsys.tenants()["prefetch"]
+    assert t.stats.submitted >= 3
+    assert t.stats.per_sysno[int(Sys.PREAD64)] >= 3
+    dl.close()

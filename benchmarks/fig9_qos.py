@@ -34,6 +34,13 @@ Part B — scaling. Two tenant rings of IOWAIT calls reaped by an *inline*
 PollerGroup (SQPOLL mode: pollers run the handlers, which block): 2
 pollers must sustain >= 1.5x the reap throughput of 1 poller.
 
+Part C — EDF. Under the ``Deadline`` policy a tenant with a tight
+``deadline_us`` must reap ahead of a no-deadline tenant's earlier-queued
+backlog: we pre-load the no-deadline tenant's SQ, then submit the
+deadline tenant's batch, and gate on the deadline tenant's MEAN
+completion time beating the backlog tenant's (near-deadline tenants reap
+first).
+
 Output CSV: name,us_per_call,derived (same convention as the other figs).
 """
 from __future__ import annotations
@@ -49,8 +56,9 @@ if __package__ in (None, ""):           # `python benchmarks/fig9_qos.py`
         if _p not in sys.path:
             sys.path.insert(0, _p)
 
-from repro.core.genesys import (Genesys, GenesysConfig, RingFull,      # noqa: E402
-                                StrictPriority, TokenBucket, WeightedFair)
+from repro.core.genesys import (Deadline, Genesys, GenesysConfig,      # noqa: E402
+                                RingFull, StrictPriority, TokenBucket,
+                                WeightedFair)
 from benchmarks.common import emit                                     # noqa: E402
 
 IOWAIT_SYS = 901            # sleeps args[0] microseconds, releasing the GIL
@@ -163,6 +171,58 @@ def _scaling_run(n_pollers: int, calls_per_tenant: int) -> float:
         g.shutdown()
 
 
+def _edf_run(n_calls: int) -> tuple[float, float]:
+    """Returns (mean completion s, mean completion s) for a deadline
+    tenant's batch vs a no-deadline tenant's already-queued backlog."""
+    g = Genesys(GenesysConfig(
+        n_workers=2, sched_pollers=1, sched_inline=True,
+        tenant_slots=1024, tenant_sq_depth=1024))
+    _register_iowait(g)
+    g.use_policies(Deadline())
+    done: dict[str, list[float]] = {"edf": [], "batch": []}
+    lock = threading.Lock()
+    try:
+        edf = g.tenant("edf", deadline_us=1000.0)
+        batch = g.tenant("batch")
+
+        errs: list = []
+
+        def _stamp(name, comps):
+            try:
+                for c in comps:
+                    c.result(timeout=60)
+                    with lock:
+                        done[name].append(time.perf_counter())
+            except Exception as e:  # noqa: BLE001 — surfaced after join
+                errs.append((name, e))
+
+        # pre-load the no-deadline tenant's SQ, THEN submit the deadline
+        # tenant: EDF order must pull the late-arriving deadline batch
+        # ahead of the queued backlog
+        bc = batch.submit([(IOWAIT_SYS, SCALE_US)] * n_calls)
+        ec = edf.submit([(IOWAIT_SYS, SCALE_US)] * n_calls)
+        threads = [threading.Thread(target=_stamp, args=("batch", bc)),
+                   threading.Thread(target=_stamp, args=("edf", ec))]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        # a stalled completion must fail the run loudly, not silently
+        # skew the gated mean with a partial sample
+        if errs:
+            raise RuntimeError(f"EDF completions stalled: {errs}")
+        for name, stamps in done.items():
+            if len(stamps) != n_calls:
+                raise RuntimeError(
+                    f"EDF run incomplete: {name} has {len(stamps)}/"
+                    f"{n_calls} completions")
+        return (sum(done["edf"]) / len(done["edf"]) - t0,
+                sum(done["batch"]) / len(done["batch"]) - t0)
+    finally:
+        g.shutdown()
+
+
 def run(quick: bool = False) -> dict[str, float]:
     probes = 150 if quick else 400
     calls_per_tenant = 256 if quick else 512
@@ -221,6 +281,14 @@ def _run(out, probes, calls_per_tenant) -> dict[str, float]:
     emit("fig9/reap_throughput_1poller", 1e6 / thr1, f"{thr1:.0f}_calls_per_s")
     emit("fig9/reap_throughput_2poller", 1e6 / thr2, f"{thr2:.0f}_calls_per_s")
     emit("fig9/poller_scaling", out["poller_scaling"], "x_2p_over_1p_median")
+
+    # -- part C: EDF — near-deadline tenants reap first (median of 3) ----------
+    edf_pairs = [_edf_run(calls_per_tenant // 2) for _ in range(3)]
+    e_mean, b_mean = sorted(edf_pairs, key=lambda p: p[1] / p[0])[1]
+    out["edf_advantage"] = sorted(b / e for e, b in edf_pairs)[1]
+    emit("fig9/edf_tenant_mean_completion", e_mean * 1e6, "us_deadline_1ms")
+    emit("fig9/nodeadline_mean_completion", b_mean * 1e6,
+         f"{out['edf_advantage']:.2f}x_later_despite_earlier_submit")
     return out
 
 
@@ -238,10 +306,15 @@ def main(argv=None) -> int:
         print(f"# FAIL: 2-poller scaling = {out['poller_scaling']:.2f}x "
               f"(< 1.5x)", flush=True)
         ok = False
+    if out["edf_advantage"] <= 1.0:
+        print(f"# FAIL: EDF deadline tenant did not reap first "
+              f"(advantage {out['edf_advantage']:.2f}x <= 1x)", flush=True)
+        ok = False
     if ok:
         print(f"# QoS gate OK: policy p99 {out['qos_p99_ratio']:.2f}x "
               f"baseline (no-policy: {out['nopolicy_p99_ratio']:.1f}x), "
-              f"2-poller scaling {out['poller_scaling']:.2f}x", flush=True)
+              f"2-poller scaling {out['poller_scaling']:.2f}x, "
+              f"EDF advantage {out['edf_advantage']:.2f}x", flush=True)
     return 0 if ok else 1
 
 

@@ -8,13 +8,14 @@ import traceback
 def main() -> None:
     from benchmarks import (case_memory, case_network, case_storage,
                             fig5_granularity, fig6_ordering, fig7_coalescing,
-                            fig8_uring, fig9_qos, roofline_report)
+                            fig8_uring, fig9_qos, fig10_fuse, roofline_report)
     suites = [
         ("fig5_granularity", fig5_granularity.run),
         ("fig6_ordering", fig6_ordering.run),
         ("fig7_coalescing", fig7_coalescing.run),
         ("fig8_uring", fig8_uring.run),
         ("fig9_qos", fig9_qos.run),
+        ("fig10_fuse", fig10_fuse.run),
         ("case_storage", case_storage.run),
         ("case_memory", case_memory.run),
         ("case_network", case_network.run),

@@ -43,8 +43,13 @@ Ordering guarantees: all paths dispatch to the shared worker pool (or, in
 ``sched_inline`` SQPOLL mode, the poller threads), so cross-call
 completion order is unspecified unless the caller imposes it (Completion
 futures, `drain()`, or dataflow deps via `invoke`). Within one ring bundle
-calls execute serially in submission order. `Genesys.drain()` is the §8.3
-barrier over *all* paths, including SQ entries no poller has seen yet.
+calls execute serially in submission order — unless the ring has a
+genesys.fuse Coalescer attached (``ring_fuse`` config /
+``tenant(..., fuse=True)``), which trades intra-bundle order for merged
+kernel crossings: fused group members complete together, with per-call
+retvals and buffer contents still bit-exact (weak ordering only, §8.3).
+`Genesys.drain()` is the §8.3 barrier over *all* paths, including SQ
+entries no poller has seen yet.
 """
 from repro.core.genesys.area import (
     SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,
@@ -54,9 +59,10 @@ from repro.core.genesys.executor import Executor, ExecutorStats
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.syscalls import Sys, SyscallTable, make_default_table
+from repro.core.genesys.fuse import Coalescer, FuseStats
 from repro.core.genesys.sched import (
-    Policy, PolicyEngine, PollerGroup, QosReject, RingPoller, SchedStats,
-    StrictPriority, TokenBucket, WeightedFair,
+    Deadline, Policy, PolicyEngine, PollerGroup, QosReject, RingPoller,
+    SchedStats, StrictPriority, TokenBucket, WeightedFair,
 )
 from repro.core.genesys.tenant import Tenant, TenantStats
 from repro.core.genesys.uring import (
@@ -73,8 +79,9 @@ __all__ = [
     "Executor", "ExecutorStats", "HostHeap", "MemoryPool",
     "Sys", "SyscallTable", "make_default_table",
     "RingFull", "RingPoller", "RingStats", "SyscallRing",
-    "Policy", "PolicyEngine", "PollerGroup", "QosReject", "SchedStats",
-    "StrictPriority", "TokenBucket", "WeightedFair",
+    "Coalescer", "FuseStats",
+    "Deadline", "Policy", "PolicyEngine", "PollerGroup", "QosReject",
+    "SchedStats", "StrictPriority", "TokenBucket", "WeightedFair",
     "Tenant", "TenantStats",
     "Genesys", "Granularity", "Ordering", "GenesysConfig", "table",
 ]

@@ -201,41 +201,53 @@ class SyscallArea:
                     raise TimeoutError(f"syscall slot {t.slot} timed out")
 
     # -- batched device-side API (genesys.uring submission path) --------------
-    def acquire_post_many(self, reqs, hw_id: int = 0) -> list[Ticket]:
+    def acquire_post_np(self, sysnos: np.ndarray, args: np.ndarray,
+                        hw_id: int = 0) -> np.ndarray:
         """Acquire + populate + READY a batch of non-blocking slots under
         one lock round (the ring submitter's path: per-call cost is the
-        payload write, not a lock/CAS handshake per call).
+        payload write, not a lock/CAS handshake per call). ``sysnos`` is
+        ``[k]``, ``args`` is ``[k, 6]`` uint64 (already masked). All slot
+        records are populated with numpy fancy-index writes — no
+        per-entry Python loop under the area lock — and the acquired slot
+        indices come back as an int64 array (the ring path never needs
+        full Tickets).
 
-        ``reqs`` is a list of ``(sysno, args)`` with args a list of ints.
-        Blocks (in chunks) while the area is exhausted, like acquire().
+        Slots are popped off the free-list tail in LIFO order, exactly as
+        serial :meth:`acquire` would hand them out. Blocks (in sub-chunks)
+        while the area is exhausted.
         """
-        tickets: list[Ticket] = []
-        i = 0
+        n = len(sysnos)
+        out = np.empty(n, dtype=np.int64)
         ready = int(SlotState.READY)
         free = int(SlotState.FREE)
+        i = 0
         with self._lock:
-            while i < len(reqs):
+            states = self.slots["state"]
+            while i < n:
                 while not self._free:
                     self._finished.wait()
-                slot = self._free.pop()
-                rec = self.slots[slot]
+                k = min(n - i, len(self._free))
+                # LIFO: the last k free slots, most-recently-freed first
+                chunk = self._free[-k:]
+                chunk.reverse()
+                del self._free[-k:]
+                slot_arr = np.asarray(chunk, dtype=np.int64)
                 # hot path: FREE -> POPULATING -> READY inlined (both legal
                 # per Fig 4; the lock makes the pair atomic anyway)
-                if int(rec["state"]) != free:
-                    raise IllegalTransition(f"free-list slot {slot} not FREE")
-                sysno, args = reqs[i]
-                self._gen[slot] += 1
-                rec["hw_id"] = hw_id
-                rec["sysno"] = sysno
-                a = rec["args"]
-                a[:] = 0
-                for j, v in enumerate(args[:6]):
-                    a[j] = v & 0xFFFFFFFFFFFFFFFF
-                rec["flags"] = 0                     # ring slots: non-blocking
-                rec["state"] = ready
-                tickets.append(Ticket(slot=slot, gen=int(self._gen[slot])))
-                i += 1
-        return tickets
+                if (states[slot_arr] != free).any():
+                    bad = slot_arr[states[slot_arr] != free]
+                    raise IllegalTransition(
+                        f"free-list slots {bad.tolist()} not FREE")
+                self._gen[slot_arr] += 1
+                recs = self.slots
+                recs["hw_id"][slot_arr] = hw_id
+                recs["sysno"][slot_arr] = sysnos[i:i + k]
+                recs["args"][slot_arr] = args[i:i + k]
+                recs["flags"][slot_arr] = 0          # ring slots: non-blocking
+                states[slot_arr] = ready
+                out[i:i + k] = slot_arr
+                i += k
+        return out
 
     # -- CPU-side API (executor) ---------------------------------------------
     def claim_for_processing(self, slot: int) -> bool:
@@ -260,27 +272,34 @@ class SyscallArea:
 
     # -- batched CPU-side API (genesys.uring worker path) ----------------------
     def claim_many(self, slots) -> None:
-        """READY -> PROCESSING for a whole ring bundle, one lock round."""
+        """READY -> PROCESSING for a whole ring bundle, one lock round and
+        one fancy-index write (no per-slot Python loop)."""
         ready, proc = int(SlotState.READY), int(SlotState.PROCESSING)
+        arr = np.asarray(slots, dtype=np.int64)
         with self._lock:
             states = self.slots["state"]
-            for slot in slots:
-                if int(states[slot]) != ready:
-                    raise IllegalTransition(f"ring slot {slot} not READY")
-                states[slot] = proc
+            if (states[arr] != ready).any():
+                bad = arr[states[arr] != ready]
+                raise IllegalTransition(f"ring slots {bad.tolist()} not READY")
+            states[arr] = proc
 
     def complete_many(self, slots, retvals) -> None:
         """Retire a ring bundle: write retvals, PROCESSING -> FREE for all
-        (ring slots are always non-blocking), ONE wakeup for the area."""
+        (ring slots are always non-blocking), ONE wakeup for the area.
+        Retval writes and state flips are vectorized fancy-index ops."""
         proc, free = int(SlotState.PROCESSING), int(SlotState.FREE)
+        arr = np.asarray(slots, dtype=np.int64)
+        rets = np.fromiter((int(r) & 0xFFFFFFFFFFFFFFFF for r in retvals),
+                           dtype=np.uint64, count=len(arr))
         with self._lock:
-            for slot, ret in zip(slots, retvals):
-                rec = self.slots[slot]
-                rec["args"][0] = int(ret) & 0xFFFFFFFFFFFFFFFF
-                if int(rec["state"]) != proc:
-                    raise IllegalTransition(f"ring slot {slot} not PROCESSING")
-                rec["state"] = free
-                self._free.append(slot)
+            states = self.slots["state"]
+            if (states[arr] != proc).any():
+                bad = arr[states[arr] != proc]
+                raise IllegalTransition(
+                    f"ring slots {bad.tolist()} not PROCESSING")
+            self.slots["args"][arr, 0] = rets
+            states[arr] = free
+            self._free.extend(arr.tolist())
             self._finished.notify_all()
 
     # -- introspection -------------------------------------------------------

@@ -76,17 +76,22 @@ class Executor:
             w.start()
 
     # -- device side: the interrupt -------------------------------------------
-    def interrupt(self, slot: int, on_complete=None, area=None) -> None:
+    def interrupt(self, slot: int, on_complete=None, area=None,
+                  coalesce_max: int | None = None) -> None:
         """Device -> CPU doorbell (paper: s_sendmsg scalar instruction).
         ``on_complete(slot, retval)`` fires after the call is processed —
         the ring's SQ-full fallback uses it to keep CQE delivery uniform.
         ``area`` overrides the slot's home area (tenant-partition slots must
-        retire to their partition's free list, not the parent's)."""
+        retire to their partition's free list, not the parent's).
+        ``coalesce_max`` is a per-call (tenant-scoped) bound on how many
+        interrupts the dispatcher may coalesce into the bundle carrying
+        this call — a latency tenant's doorbell fallback is never buried
+        under a full ``coalesce_max``-deep bundle of batch traffic."""
         with self._inflight_lock:
             self._inflight += 1
         with self._stats_lock:
             self.stats.interrupts += 1
-        self._doorbell.put((slot, on_complete, area))
+        self._doorbell.put((slot, on_complete, area, coalesce_max))
 
     def add_inflight(self, n: int) -> None:
         """Account ring submissions the moment they land in the SQ, so
@@ -98,9 +103,10 @@ class Executor:
     def submit_bundle(self, bundle, *, counted: bool = False) -> None:
         """Enqueue a polling-mode bundle directly on the worker pool,
         bypassing doorbell + dispatcher (one queue op per batch). A bundle
-        is either a list of ``(slot, on_complete, area)`` triples or an
-        object with ``process(executor)`` that owns its own accounting (the
-        ring's batch). ``counted=True`` means add_inflight() already ran."""
+        is either a list of ``(slot, on_complete, area[, coalesce_max])``
+        tuples or an object with ``process(executor)`` that owns its own
+        accounting (the ring's batch). ``counted=True`` means
+        add_inflight() already ran."""
         if not len(bundle):
             return
         if not counted:
@@ -110,23 +116,46 @@ class Executor:
         self._bundles.put(bundle)
 
     # -- dispatcher: interrupt handler + coalescing -----------------------------
+    @staticmethod
+    def _item_cmax(item) -> int | None:
+        return item[3] if len(item) > 3 else None
+
     def _dispatch_loop(self) -> None:
+        carry = None        # item that refused to join the previous bundle
         while not self._stop.is_set():
-            try:
-                first = self._doorbell.get(timeout=0.05)
-            except queue.Empty:
-                continue
+            if carry is not None:
+                first, carry = carry, None
+            else:
+                try:
+                    first = self._doorbell.get(timeout=0.05)
+                except queue.Empty:
+                    continue
             bundle = [first]
-            if self.coalesce_max > 1 and self.coalesce_window_us > 0:
+            # the bundle bound is the min of the global sysfs knob and
+            # every member's tenant-scoped coalesce_max
+            limit = self.coalesce_max
+            cmax = self._item_cmax(first)
+            if cmax is not None:
+                limit = min(limit, max(1, int(cmax)))
+            if limit > 1 and self.coalesce_window_us > 0:
                 deadline = time.monotonic() + self.coalesce_window_us / 1e6
-                while len(bundle) < self.coalesce_max:
+                while len(bundle) < limit:
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         break
                     try:
-                        bundle.append(self._doorbell.get(timeout=remaining))
+                        item = self._doorbell.get(timeout=remaining)
                     except queue.Empty:
                         break
+                    cmax = self._item_cmax(item)
+                    if cmax is not None and int(cmax) <= len(bundle):
+                        # joining would already blow this item's own bound:
+                        # it starts the NEXT bundle instead
+                        carry = item
+                        break
+                    bundle.append(item)
+                    if cmax is not None:
+                        limit = min(limit, max(1, int(cmax)))
             k = len(bundle)
             with self._stats_lock:
                 self.stats.bundles += 1
@@ -145,7 +174,7 @@ class Executor:
             if hasattr(bundle, "process"):     # polling-mode batch (ring)
                 bundle.process(self)
             else:
-                for slot, on_complete, area in bundle:  # serial (§4.2)
+                for slot, on_complete, area, *_ in bundle:  # serial (§4.2)
                     self._process(slot, on_complete, area)
             dt = time.monotonic() - t0
             with self._stats_lock:

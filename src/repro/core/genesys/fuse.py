@@ -1,0 +1,327 @@
+"""genesys.fuse: cross-call semantic coalescing of popped ring bundles.
+
+The paper's biggest throughput lever is coalescing (§6, Fig 7): aggregate
+per-work-item syscalls into fewer, larger kernel crossings. The executor
+already reproduces the paper's *interrupt* coalescing (N doorbells -> one
+worker bundle), but every member of that bundle still dispatches as its
+own host syscall. This module goes one step further — GPUstore-style
+*request merging* — by fusing the calls themselves:
+
+  * **read-range fusion** — adjacent/overlapping ``PREAD64`` /
+    ``PREAD64_FIXED`` ranges on the same fd become ONE large pread into a
+    scratch buffer; the bytes are scattered back to each member's own
+    destination buffer (numpy slice copies) and each member's retval is
+    reconstructed exactly — a short read (EOF inside the merged span)
+    splits across members precisely as the unfused calls would have
+    returned;
+  * **read dedup** — identical concurrent ranges collapse into the
+    merged span for free (they are, by definition, overlapping), so N
+    readers of one hot block cost one kernel crossing;
+  * **mmap batching** — same-size-class ``MMAP`` allocations in one
+    bundle are carved by :meth:`MemoryPool.mmap_many` under a single pool
+    lock round, one address per member.
+
+Everything else passes through untouched, in submission order.
+
+Semantics: fusion is only legal under the paper's *weak ordering* (§8.3
+— exactly what ring submissions are): members of a fused group complete
+together, so intra-bundle completion order is not submission order.
+Retvals and destination-buffer contents are bit-exact with the unfused
+path (property-tested against an oracle in tests/test_fuse.py): the
+scatter writes members in submission order (aliased destinations keep
+last-write-wins), and reads on an fd that the same bundle also
+closes/writes are excluded from fusion so they keep their serial
+position. Errors from a merged read (bad fd, etc.) propagate to every
+member, matching what each unfused call would have seen.
+
+Wiring: a :class:`Coalescer` hangs off a :class:`SyscallRing` (``fuse=``
+knob; per tenant via ``Genesys.tenant(name, fuse=True)`` or globally via
+``GenesysConfig.ring_fuse``). :meth:`SyscallRing.dispatch_entries` routes
+every popped bundle through :meth:`Coalescer.bundle` — the pre-pass
+between ``pop_entries`` and dispatch — so both PollerGroup reaping and
+direct ``process_pending()`` callers fuse identically.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.genesys.syscalls import Sys
+
+_U64 = 0xFFFFFFFFFFFFFFFF
+
+
+@dataclass
+class FuseStats:
+    bundles: int = 0            # popped bundles run through the coalescer
+    fused_bundles: int = 0      # bundles where at least one group formed
+    calls_in: int = 0           # member calls inspected
+    fused_calls: int = 0        # members that rode a merged dispatch
+    read_groups: int = 0        # merged preads issued
+    mmap_groups: int = 0        # batched mmap carves issued
+    deduped: int = 0            # members whose exact range repeated another
+    dispatches_saved: int = 0   # calls_in-equivalents that never dispatched
+    bytes_merged: int = 0       # bytes fetched by merged reads
+
+
+class _ReadMember:
+    """One fusable pread: its bundle index + decoded args."""
+
+    __slots__ = ("idx", "buf", "count", "offset", "dst_off", "fixed")
+
+    def __init__(self, idx, buf, count, offset, dst_off, fixed):
+        self.idx = idx
+        self.buf = buf              # heap handle or fixed-buffer index
+        self.count = count
+        self.offset = offset
+        self.dst_off = dst_off
+        self.fixed = fixed
+
+
+class Coalescer:
+    """Fusion pre-pass for popped ring bundles (see module docstring).
+
+    ``max_span`` bounds a merged read's byte span (one fused pread never
+    grows past it); ``min_group`` is the smallest member count worth a
+    merged dispatch (singletons always pass through).
+    """
+
+    FUSABLE_READS = frozenset((int(Sys.PREAD64), int(Sys.PREAD64_FIXED)))
+    _FUSABLE_ALL = FUSABLE_READS | {int(Sys.MMAP)}
+    # same-fd ops that make hoisting a merged read unsafe: a close would
+    # turn still-valid reads into -EBADF, a write would let earlier-
+    # submitted reads observe later bytes. Reads on such fds stay on the
+    # serial passthrough path.
+    _FD_CONFLICTS = frozenset((int(Sys.CLOSE), int(Sys.WRITE),
+                               int(Sys.PWRITE64)))
+
+    def __init__(self, *, max_span: int = 8 << 20, min_group: int = 2):
+        self.max_span = int(max_span)
+        self.min_group = max(2, int(min_group))
+        self.stats = FuseStats()
+        self._stats_lock = threading.Lock()
+
+    # -- planning ---------------------------------------------------------------
+    def _pass_through(self, ring, entries):
+        """Nothing fused: account the bundle and hand back a plain batch."""
+        from repro.core.genesys.uring import _RingBatch
+        with self._stats_lock:
+            self.stats.bundles += 1
+            self.stats.calls_in += len(entries)
+        return _RingBatch(ring, entries)
+
+    def bundle(self, ring, entries):
+        """Plan one popped bundle: returns a :class:`_FusedBatch` if any
+        group formed, else a plain ``_RingBatch`` (zero-cost pass)."""
+        n = len(entries)
+        # pre-scan on the sysnos the SQEs already carry — no slot touch;
+        # conflicting same-fd ops ride along so their fd can veto fusion
+        cand = [i for i in range(n) if entries[i][3] in self._FUSABLE_ALL
+                or entries[i][3] in self._FD_CONFLICTS]
+        n_fusable = sum(1 for i in cand
+                        if entries[i][3] in self._FUSABLE_ALL)
+        if n_fusable < self.min_group:
+            return self._pass_through(ring, entries)
+        # gather every candidate's args in ONE fancy-index read + tolist
+        # (per-entry structured-scalar access would dominate the plan)
+        slot_arr = np.fromiter((entries[i][0] for i in cand),
+                               dtype=np.int64, count=len(cand))
+        args = ring.area.slots["args"][slot_arr].tolist()
+        conflict_fds = {a[0] for i, a in zip(cand, args)
+                        if entries[i][3] in self._FD_CONFLICTS}
+        pread_fixed = int(Sys.PREAD64_FIXED)
+        reads: dict[int, list[_ReadMember]] = {}    # fd -> members
+        mmaps: dict[int, list[int]] = {}            # size class -> indices
+        fusable = 0
+        for i, a in zip(cand, args):
+            sysno = entries[i][3]
+            if sysno == int(Sys.MMAP):
+                if a[1] > 0:
+                    mmaps.setdefault(_size_class(a[1]), []).append(i)
+                    fusable += 1
+            elif sysno in self.FUSABLE_READS and a[2] > 0 \
+                    and a[0] not in conflict_fds:   # pread(0) / hazardous
+                m = _ReadMember(i, a[1], a[2], a[3], a[4],  # fd: pass thru
+                                sysno == pread_fixed)
+                reads.setdefault(a[0], []).append(m)
+                fusable += 1
+        if fusable < self.min_group:
+            return self._pass_through(ring, entries)
+        read_groups, deduped = self._plan_reads(reads)
+        mmap_groups = [(cls, idxs) for cls, idxs in mmaps.items()
+                       if len(idxs) >= self.min_group]
+        if not read_groups and not mmap_groups:
+            return self._pass_through(ring, entries)
+        grouped = set()
+        for _fd, _lo, _hi, members in read_groups:
+            grouped.update(m.idx for m in members)
+        for _cls, idxs in mmap_groups:
+            grouped.update(idxs)
+        passthrough = [i for i in range(n) if i not in grouped]
+        with self._stats_lock:
+            st = self.stats
+            st.bundles += 1
+            st.fused_bundles += 1
+            st.calls_in += n
+            st.fused_calls += len(grouped)
+            st.read_groups += len(read_groups)
+            st.mmap_groups += len(mmap_groups)
+            st.deduped += deduped
+            st.dispatches_saved += (len(grouped) - len(read_groups)
+                                    - len(mmap_groups))
+            st.bytes_merged += sum(hi - lo for _f, lo, hi, _m in read_groups)
+        return _FusedBatch(ring, entries, read_groups, mmap_groups,
+                           passthrough)
+
+    def _plan_reads(self, reads):
+        """Merge each fd's ranges into maximal adjacent/overlapping runs.
+
+        Returns ``([(fd, lo, hi, members), ...], deduped_count)`` where
+        every group's ``[lo, hi)`` is exactly the union of its members'
+        ranges — never a byte more (gaps split runs) — and has at least
+        ``min_group`` members.
+        """
+        groups = []
+        deduped = 0
+        for fd, members in reads.items():
+            members.sort(key=lambda m: (m.offset, m.count))
+            run: list[_ReadMember] = []
+            run_end = -1
+            seen_ranges: set[tuple[int, int]] = set()
+            for m in members:
+                if run and m.offset <= run_end \
+                        and max(run_end, m.offset + m.count) \
+                        - run[0].offset <= self.max_span:
+                    run.append(m)
+                    run_end = max(run_end, m.offset + m.count)
+                else:
+                    if len(run) >= self.min_group:
+                        groups.append((fd, run[0].offset, run_end, run))
+                    run = [m]
+                    run_end = m.offset + m.count
+                key = (m.offset, m.count)
+                if key in seen_ranges:
+                    deduped += 1
+                seen_ranges.add(key)
+            if len(run) >= self.min_group:
+                groups.append((fd, run[0].offset, run_end, run))
+        return groups, deduped
+
+
+def _size_class(length: int) -> int:
+    """MMAP size class: page-rounded length (the pool's own rounding), so
+    batched members are exactly the allocations the pool would have made."""
+    from repro.core.genesys.memory_pool import PAGE
+    return ((int(length) + PAGE - 1) // PAGE) * PAGE
+
+
+class _FusedBatch:
+    """A popped bundle with a fusion plan; the executor worker runs
+    :meth:`process` (same bundle protocol as ``_RingBatch``): claim all
+    slots, run passthroughs serially, run each fused group as one
+    dispatch + scatter, retire all slots, resolve all futures — one lock
+    round per structure, exactly like the unfused batch."""
+
+    __slots__ = ("ring", "entries", "read_groups", "mmap_groups",
+                 "passthrough")
+
+    def __init__(self, ring, entries, read_groups, mmap_groups, passthrough):
+        self.ring = ring
+        self.entries = entries
+        self.read_groups = read_groups
+        self.mmap_groups = mmap_groups
+        self.passthrough = passthrough
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def process(self, ex) -> None:
+        ring = self.ring
+        area, table = ring.area, ex.table
+        entries = self.entries
+        slots = [e[0] for e in entries]
+        n = len(entries)
+        rets = [0] * n
+        try:
+            area.claim_many(slots)
+            recs = area.slots
+            for i in self.passthrough:
+                rec = recs[slots[i]]
+                try:
+                    rets[i] = table.dispatch(rec["sysno"], rec["args"])
+                except Exception:       # same -EIO net as the unfused path
+                    rets[i] = -5
+            for fd, lo, hi, members in self.read_groups:
+                self._run_read_group(table, fd, lo, hi, members, rets)
+            for cls, idxs in self.mmap_groups:
+                self._run_mmap_group(table, cls, idxs, rets)
+            area.complete_many(slots, rets)
+            ring._complete_batch(entries, rets)
+            with ex._stats_lock:
+                ex.stats.processed += n
+                ex.stats.ring_processed += n
+        finally:
+            # mirror _RingBatch.process(): in-flight accounting survives
+            # any failure, so drain()/shutdown() can never hang
+            with ex._inflight_lock:
+                ex._inflight -= n
+                if ex._inflight == 0:
+                    ex._idle.notify_all()
+
+    # -- fused executors ---------------------------------------------------------
+    def _run_read_group(self, table, fd, lo, hi, members, rets) -> None:
+        """One merged pread for the whole ``[lo, hi)`` run, scattered back.
+
+        The merged read goes through the normal syscall table (scratch
+        heap buffer), so errno mapping, handler overrides, and dispatch
+        stats stay uniform — the bundle just crosses the "kernel" once.
+        """
+        heap = table.heap
+        total = hi - lo
+        scratch = np.empty(total, dtype=np.uint8)   # scatter clamps to nread
+        sh = heap.register(scratch)
+        try:
+            nread = table.dispatch(
+                int(Sys.PREAD64), [fd, sh, total, lo, 0, 0])
+        except Exception:       # non-OSError (e.g. OverflowError on an
+            nread = -5          # out-of-C-range offset): same -EIO net as
+        finally:                # the unfused per-call dispatch wrapper
+            heap.release(sh)
+        if nread < 0:                       # merged error: every member
+            for m in members:               # sees what its own call would
+                rets[m.idx] = nread
+            return
+        end = lo + nread                    # bytes that actually exist
+        # one heap lock round for every non-fixed destination buffer
+        dsts = heap.resolve_many(m.buf for m in members if not m.fixed)
+        # scatter in SUBMISSION order (members arrive offset-sorted from
+        # the range merge): when two members' destination regions alias,
+        # the last submitted write must win, exactly as the unfused
+        # serial dispatch would leave the buffer
+        for m in sorted(members, key=lambda m: m.idx):
+            # exact short-read split: an unfused pread(fd, count, offset)
+            # returns min(count, max(0, EOF - offset)) bytes
+            avail = min(m.count, max(0, end - m.offset))
+            rets[m.idx] = avail
+            if avail <= 0:
+                continue
+            try:
+                dst = table._fixed[m.buf] if m.fixed else dsts[m.buf]
+                start = m.offset - lo
+                np.asarray(dst)[m.dst_off:m.dst_off + avail] = \
+                    scratch[start:start + avail]
+            except Exception:               # dead handle / bad index: the
+                rets[m.idx] = -5            # member alone sees -EIO
+
+    def _run_mmap_group(self, table, cls, idxs, rets) -> None:
+        """Same-size-class MMAPs: one pool lock round, one address each."""
+        try:
+            addrs = table.pool.mmap_many(cls, len(idxs))
+        except Exception:
+            for i in idxs:
+                rets[i] = -5
+            return
+        for i, addr in zip(idxs, addrs):
+            rets[i] = addr

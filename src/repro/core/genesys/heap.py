@@ -30,6 +30,15 @@ class HostHeap:
         with self._lock:
             return self._objs[int(handle)]
 
+    def resolve_many(self, handles) -> dict[int, Any]:
+        """Resolve a batch under ONE lock round (the genesys.fuse scatter
+        path). Dead handles are simply absent from the returned dict —
+        the caller sees the same KeyError it would get from resolve()."""
+        with self._lock:
+            objs = self._objs
+            return {h: objs[h]
+                    for h in (int(x) for x in handles) if h in objs}
+
     def release(self, handle: int) -> None:
         with self._lock:
             self._objs.pop(int(handle), None)

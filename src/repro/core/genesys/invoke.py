@@ -77,6 +77,9 @@ class GenesysConfig:
     tenant_slots: int = 256       # area partition carved per tenant
     tenant_sq_depth: int = 128
     tenant_cq_depth: int = 512
+    # genesys.fuse: cross-call coalescing of popped ring bundles
+    ring_fuse: bool = False       # fuse the shared ring's bundles
+    fuse_max_span: int = 8 << 20  # merged-read byte-span bound
 
 
 # ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
@@ -110,9 +113,15 @@ def pack_args(*vals) -> jnp.ndarray:
     return jnp.stack(rows)  # [6, 2]
 
 
-def _np_join(args_np: np.ndarray) -> list[int]:
-    """[6,2] int32 -> six python ints."""
-    return [_join64(args_np[i, 0], args_np[i, 1]) for i in range(6)]
+def _np_join_batch(rows: np.ndarray) -> np.ndarray:
+    """Vectorized arg-join: ``[k, 6, 2]`` int32 (lo, hi) pairs ->
+    ``[k, 6]`` uint64 in two numpy ops — no per-call, per-arg Python
+    loop on the WORK_ITEM hot path."""
+    r = np.asarray(rows)
+    m32 = np.uint64(0xFFFFFFFF)
+    lo = r[..., 0].astype(np.uint64) & m32
+    hi = r[..., 1].astype(np.uint64) & m32
+    return (hi << np.uint64(32)) | lo
 
 
 # ---------- data-dependency "barriers" ----------------------------------------
@@ -187,11 +196,15 @@ class Genesys:
         with self._lock:
             if self._ring is None:
                 c = self.config
+                fuse = None
+                if c.ring_fuse:
+                    from repro.core.genesys.fuse import Coalescer
+                    fuse = Coalescer(max_span=c.fuse_max_span)
                 self._ring = SyscallRing(
                     self.area, self.executor,
                     sq_depth=c.ring_sq_depth, cq_depth=c.ring_cq_depth,
                     batch_max=c.ring_batch_max, spin_polls=c.ring_spin_polls,
-                    max_sleep_s=c.ring_max_sleep_s)
+                    max_sleep_s=c.ring_max_sleep_s, fuse=fuse)
             return self._ring
 
     # ------------- host-side path (used by substrates & the executor itself) --
@@ -264,25 +277,42 @@ class Genesys:
     def tenant(self, name: str, *, weight: float = 1.0, priority: int = 0,
                rate_limit: float | None = None, burst: float | None = None,
                n_slots: int | None = None, sq_depth: int | None = None,
-               batch_max: int | None = None) -> Tenant:
+               batch_max: int | None = None, fuse: bool = False,
+               deadline_us: float | None = None,
+               coalesce_max: int | None = None) -> Tenant:
         """Get or create the named tenant: a private SyscallRing over a
         carved partition of the slot area, registered with the shared
         PollerGroup and policy engine. Re-requesting a name returns the
-        existing tenant (QoS kwargs are only applied on first creation)."""
+        existing tenant (QoS kwargs are only applied on first creation).
+
+        ``fuse=True`` attaches a genesys.fuse Coalescer to the tenant's
+        ring: popped bundles get cross-call semantic coalescing (merged
+        preads, deduped reads, batched mmaps). ``deadline_us`` is the
+        EDF knob the :class:`~repro.core.genesys.sched.Deadline` policy
+        reads; ``coalesce_max`` bounds interrupt coalescing for this
+        tenant's doorbell-fallback calls."""
         c = self.config
         with self._lock:
             t = self._tenants.get(name)
             if t is not None:
                 return t
+            ring_fuse = None
+            if fuse:
+                from repro.core.genesys.fuse import Coalescer
+                ring_fuse = Coalescer(max_span=c.fuse_max_span)
             part = self.area.carve(n_slots or c.tenant_slots)
+            # (fallback_coalesce_max is set by Tenant.__init__ from its
+            # coalesce_max knob — one mechanism, also covering Tenants
+            # constructed directly around an existing ring)
             ring = SyscallRing(
                 part, self.executor,
                 sq_depth=sq_depth or c.tenant_sq_depth,
                 cq_depth=c.tenant_cq_depth,
                 batch_max=batch_max or c.ring_batch_max,
-                start_poller=False)
+                start_poller=False, fuse=ring_fuse)
             t = Tenant(name, ring, weight=weight, priority=priority,
-                       rate_limit=rate_limit, burst=burst, engine=self.engine)
+                       rate_limit=rate_limit, burst=burst, engine=self.engine,
+                       deadline_us=deadline_us, coalesce_max=coalesce_max)
             self._sched_locked().add(ring, tenant=t)
             self._tenants[name] = t
             return t
@@ -347,18 +377,20 @@ class Genesys:
         a = np.asarray(args_np)
         batched = a.ndim == 3
         rows = a if batched else a[None]
+        # vectorized arg-join: [k,6,2] (lo,hi) int32 -> [k,6] uint64 in two
+        # numpy ops, shared by both delivery paths
+        joined = _np_join_batch(rows)
         if via_ring:
-            comps = self.ring.submit_many(
-                [(sysno, *_np_join(r)) for r in rows], hw_id=hw)
+            comps = self.ring.submit_np(sysno, joined, hw_id=hw)
             if not blocking:
                 return np.zeros((len(rows), 2) if batched else (2,), np.int32)
             rets = np.array([_split64(c.result()) for c in comps],
                             dtype=np.int32)
             return rets if batched else rets[0]
         tickets = []
-        for r in rows:
+        for r in joined:
             t = self.area.acquire(hw)
-            self.area.post(t, sysno, _np_join(r), blocking)
+            self.area.post(t, sysno, r, blocking)
             self.executor.interrupt(t.slot)
             tickets.append(t)
         if not blocking:

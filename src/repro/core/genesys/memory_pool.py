@@ -43,13 +43,22 @@ class MemoryPool:
 
     # -- syscall handlers -----------------------------------------------------
     def mmap(self, length: int) -> int:
+        return self.mmap_many(length, 1)[0]
+
+    def mmap_many(self, length: int, n: int) -> list[int]:
+        """Batched mmap (genesys.fuse size-class batching): carve ``n``
+        regions of ``length`` bytes under ONE lock round and one RSS-trace
+        record — per-region cost collapses to a dict insert."""
         length = ((int(length) + PAGE - 1) // PAGE) * PAGE
+        addrs: list[int] = []
         with self._lock:
-            addr = self._next_addr
-            self._next_addr += length + PAGE  # guard page gap
-            self._regions[addr] = Region(addr=addr, length=length)
+            for _ in range(int(n)):
+                addr = self._next_addr
+                self._next_addr += length + PAGE  # guard page gap
+                self._regions[addr] = Region(addr=addr, length=length)
+                addrs.append(addr)
             self._record()
-            return addr
+        return addrs
 
     def munmap(self, addr: int, length: int = 0) -> int:
         with self._lock:

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 
@@ -64,6 +65,14 @@ class Policy:
       * ``on_reap(tenant, entries)`` — a poller popped ``entries``
         (``(slot, user_data, flags, sysno)`` tuples) from the tenant's SQ:
         charge credits / update accounting;
+      * ``on_abort(tenant, calls)`` — a submission this policy's
+        ``on_submit`` already saw was never submitted after all (a later
+        policy rejected it, or the ring raised
+        :class:`~repro.core.genesys.uring.RingFull`): roll back any
+        per-submission state;
+      * ``on_fallback(tenant, n)`` — ``n`` calls of an admitted
+        submission overflowed the tenant's SQ onto the doorbell path, so
+        they will never appear in ``on_reap``: settle their accounting;
       * ``order_key(tenant)`` — sort key contribution for poller visit
         order (ascending); ``None`` means no opinion;
       * ``quantum(tenant, default)`` — bound how many SQEs one poller
@@ -77,6 +86,12 @@ class Policy:
 
     def on_full(self, tenant, overflow: int):
         return None
+
+    def on_abort(self, tenant, calls) -> None:
+        pass
+
+    def on_fallback(self, tenant, n: int) -> None:
+        pass
 
     def on_reap(self, tenant, entries) -> None:
         pass
@@ -110,13 +125,34 @@ class PolicyEngine:
     def admit(self, tenant, calls) -> float:
         """Run every ``on_submit`` hook; returns the delay (seconds) the
         submitter must pay, 0.0 for immediate admission. Raises
-        :class:`QosReject` if any policy refuses."""
+        :class:`QosReject` if any policy refuses — after unwinding the
+        hooks that already ran (their ``on_abort``), so a reject leaks no
+        per-submission state out of earlier policies in the chain."""
         delay = 0.0
+        ran: list[Policy] = []
         for p in self.policies:
-            d = p.on_submit(tenant, calls)
+            try:
+                d = p.on_submit(tenant, calls)
+            except QosReject:
+                for q in reversed(ran):
+                    q.on_abort(tenant, calls)
+                raise
+            ran.append(p)
             if d is not None:
                 delay = max(delay, float(d))
         return delay
+
+    def aborted(self, tenant, calls) -> None:
+        """An admitted submission was never submitted (e.g. RingFull):
+        every policy rolls back its per-submission state."""
+        for p in self.policies:
+            p.on_abort(tenant, calls)
+
+    def fell_back(self, tenant, n: int) -> None:
+        """``n`` admitted calls overflowed onto the doorbell path and will
+        never be reaped off the SQ; policies settle their accounting."""
+        for p in self.policies:
+            p.on_fallback(tenant, n)
 
     def overflow_policy(self, tenant, overflow: int) -> str | None:
         for p in self.policies:
@@ -187,19 +223,10 @@ class TokenBucket(Policy):
         return min(burst, tokens + (now - stamp) * rate)
 
     def on_submit(self, tenant, calls):
-        n = len(calls)
         # two-phase: plan every involved bucket's charge first, commit
         # only if the whole submission is admitted — a reject must not
         # leak tokens out of sibling buckets (nothing was submitted)
-        plan: list[tuple] = []      # (key, need, rate, burst)
-        if getattr(tenant, "rate_limit", None):
-            rate = float(tenant.rate_limit)
-            burst = float(tenant.burst or max(rate, 1.0))
-            plan.append((tenant.name, float(n), rate, burst))
-        for sysno, (rate, burst) in self.sysno_rates.items():
-            k = sum(1 for c in calls if int(c[0]) == sysno)
-            if k:
-                plan.append(((tenant.name, sysno), float(k), rate, burst))
+        plan = self._charge_plan(tenant, calls)
         if not plan:
             return None
         delay = 0.0
@@ -225,6 +252,34 @@ class TokenBucket(Policy):
                     delay = max(delay, -tokens / rate)
         return delay or None
 
+    def _charge_plan(self, tenant, calls) -> list[tuple]:
+        """The ``(key, amount, rate, burst)`` charges this submission
+        involves — shared by on_submit (commit) and on_abort (refund)."""
+        plan: list[tuple] = []
+        n = len(calls)
+        if getattr(tenant, "rate_limit", None):
+            rate = float(tenant.rate_limit)
+            burst = float(tenant.burst or max(rate, 1.0))
+            plan.append((tenant.name, float(n), rate, burst))
+        for sysno, (rate, burst) in self.sysno_rates.items():
+            k = sum(1 for c in calls if int(c[0]) == sysno)
+            if k:
+                plan.append(((tenant.name, sysno), float(k), rate, burst))
+        return plan
+
+    def on_abort(self, tenant, calls) -> None:
+        """The charged submission never happened (a later policy rejected
+        it, or the ring raised RingFull): hand the tokens back — capped at
+        burst — so failed submissions don't throttle future real work."""
+        plan = self._charge_plan(tenant, calls)
+        if not plan:
+            return
+        with self._lock:
+            for key, back, _rate, burst in plan:
+                b = self._buckets.get(key)
+                if b is not None:
+                    b[0] = min(burst, b[0] + back)
+
 
 class StrictPriority(Policy):
     """Reap-side strict priority: pollers visit higher-``priority``
@@ -233,6 +288,83 @@ class StrictPriority(Policy):
 
     def order_key(self, tenant):
         return -int(getattr(tenant, "priority", 0))
+
+
+class Deadline(Policy):
+    """EDF (earliest-deadline-first) reap order, built on ``order_key``.
+
+    Tenants with a ``deadline_us`` knob get an absolute deadline stamped
+    per admitted submission (``now + deadline_us``); pollers visit the
+    tenant whose *earliest outstanding* deadline is nearest first, so a
+    near-deadline tenant's SQEs are reaped before everyone else's backlog
+    regardless of arrival order. Tenants without a deadline sort last
+    (after every deadline tenant). Reaps retire deadlines FIFO — the ring
+    pops in submission order, so the oldest stamps go first.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # tenant name -> deque of [abs_deadline_monotonic, n_calls]
+        self._pending: dict[str, object] = {}
+
+    def on_submit(self, tenant, calls):
+        d_us = getattr(tenant, "deadline_us", None)
+        if not d_us:
+            return None
+        stamp = time.monotonic() + float(d_us) / 1e6
+        with self._lock:
+            q = self._pending.get(tenant.name)
+            if q is None:
+                q = self._pending[tenant.name] = deque()
+            q.append([stamp, len(calls)])
+        return None
+
+    def order_key(self, tenant):
+        with self._lock:
+            q = self._pending.get(tenant.name)
+            if q:
+                return q[0][0]
+        return float("inf")     # no outstanding deadline: visit last
+
+    def on_reap(self, tenant, entries) -> None:
+        k = len(entries)
+        with self._lock:
+            q = self._pending.get(tenant.name)
+            while k > 0 and q:
+                head = q[0]
+                take = min(k, head[1])
+                head[1] -= take
+                k -= take
+                if head[1] == 0:
+                    q.popleft()
+
+    def on_abort(self, tenant, calls) -> None:
+        """The stamped submission never reached the SQ (rejected by a
+        later policy, or RingFull): retire its stamp — the newest one of
+        matching size — or a stale deadline would pin this tenant first
+        in the visit order forever."""
+        self._retire_newest(tenant.name, len(calls))
+
+    def on_fallback(self, tenant, n: int) -> None:
+        """``n`` tail calls of the newest submission bypassed the SQ via
+        the doorbell; they will never be reaped, so their share of the
+        stamp must retire now."""
+        self._retire_newest(tenant.name, n)
+
+    def _retire_newest(self, name: str, k: int) -> None:
+        with self._lock:
+            q = self._pending.get(name)
+            while k > 0 and q:
+                tail = q[-1]
+                take = min(k, tail[1])
+                tail[1] -= take
+                k -= take
+                if tail[1] == 0:
+                    q.pop()
+
+    def on_close(self, tenant) -> None:
+        with self._lock:
+            self._pending.pop(tenant.name, None)
 
 
 class WeightedFair(Policy):

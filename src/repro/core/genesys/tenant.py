@@ -53,7 +53,9 @@ class Tenant:
     def __init__(self, name: str, ring: SyscallRing, *,
                  weight: float = 1.0, priority: int = 0,
                  rate_limit: float | None = None, burst: float | None = None,
-                 engine: PolicyEngine | None = None):
+                 engine: PolicyEngine | None = None,
+                 deadline_us: float | None = None,
+                 coalesce_max: int | None = None):
         self.name = str(name)
         self.ring = ring
         self.area: SyscallArea = ring.area       # the carved partition
@@ -61,6 +63,15 @@ class Tenant:
         self.priority = int(priority)
         self.rate_limit = rate_limit
         self.burst = burst
+        # EDF reap-order knob (sched.Deadline): submissions from this
+        # tenant want service within deadline_us of admission
+        self.deadline_us = deadline_us
+        # per-tenant interrupt-coalescing bound for doorbell fallbacks
+        # (the paper's coalesce_max sysfs knob, tenant-scoped); the ring
+        # carries it to Executor.interrupt on the SQ-full path
+        self.coalesce_max = coalesce_max
+        if coalesce_max is not None:
+            ring.fallback_coalesce_max = int(coalesce_max)
         self.engine = engine if engine is not None else PolicyEngine()
         self.stats = TenantStats()
         # submit() may be called from many threads; counters are
@@ -98,8 +109,25 @@ class Tenant:
                 with self._stats_lock:
                     self.stats.sq_full_events += 1
                 sq_full = self.engine.overflow_policy(self, deficit) or "spin"
-        comps = self.ring.submit_many(calls, want_cqe=want_cqe, hw_id=hw_id,
-                                      sq_full=sq_full)
+        # fallback_out gives THIS submission's doorbell-fallback count;
+        # diffing the ring's shared counter would misattribute concurrent
+        # submitters' fallbacks and double-retire policy state
+        fb: list = []
+        try:
+            comps = self.ring.submit_many(calls, want_cqe=want_cqe,
+                                          hw_id=hw_id, sq_full=sq_full,
+                                          fallback_out=fb)
+        except Exception:
+            # nothing was submitted (RingFull et al.): policies roll back
+            # per-submission state (e.g. a Deadline stamp) or it would
+            # skew the reap order forever
+            self.engine.aborted(self, calls)
+            raise
+        fb_delta = sum(fb)
+        if fb_delta > 0:
+            # overflow calls rode the doorbell: pollers will never reap
+            # them off the SQ, so reap-side policy accounting settles now
+            self.engine.fell_back(self, fb_delta)
         with self._stats_lock:
             self.stats.submitted += n
             per = self.stats.per_sysno

@@ -140,11 +140,18 @@ class SyscallRing:
     def __init__(self, area: SyscallArea, executor: Executor, *,
                  sq_depth: int = 256, cq_depth: int = 1024,
                  batch_max: int = 64, spin_polls: int = 64,
-                 max_sleep_s: float = 0.002, start_poller: bool = True):
+                 max_sleep_s: float = 0.002, start_poller: bool = True,
+                 fuse=None, fallback_coalesce_max: int | None = None):
         self.area = area
         self.executor = executor
         self.sq_depth = int(sq_depth)
         self.batch_max = max(1, int(batch_max))
+        # genesys.fuse: optional cross-call Coalescer pre-pass; popped
+        # bundles route through it in dispatch_entries (see fuse.py)
+        self.fuse = fuse
+        # per-tenant interrupt-coalescing bound for SQ-full doorbell
+        # fallbacks (the paper's coalesce_max sysfs knob, tenant-scoped)
+        self.fallback_coalesce_max = fallback_coalesce_max
         self.cq = CompletionQueue(cq_depth)
         self.stats = RingStats()
         # SQ ring: slot index + user_data + flags + sysno per entry
@@ -156,6 +163,7 @@ class SyscallRing:
         self._sq_sysno = np.zeros(self.sq_depth, dtype=np.int64)
         self._sq_head = 0           # consumer (poller), monotonic
         self._sq_tail = 0           # producer (device side), monotonic
+        self._sq_reserved = 0       # space promised to sq_full="raise" batches
         self._sq_lock = threading.Lock()
         # SQPOLL-style wakeup protocol
         self._need_wakeup = False
@@ -180,8 +188,8 @@ class SyscallRing:
 
     # -- submission (device side) ---------------------------------------------
     def submit_many(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
-                    sq_full: str = "spin", spin_timeout_s: float = 5.0
-                    ) -> list[Completion]:
+                    sq_full: str = "spin", spin_timeout_s: float = 5.0,
+                    fallback_out: list | None = None) -> list[Completion]:
         """Post a batch of ``(sysno, *args)`` calls; returns one
         :class:`Completion` per call, in submission order.
 
@@ -190,34 +198,106 @@ class SyscallRing:
         (immediate fallback to the interrupt path — calls still complete
         through the same futures/CQ), or ``"raise"`` (:class:`RingFull`
         unless the whole batch fits up front; nothing is submitted).
+
+        ``fallback_out``: optional list this call appends ITS OWN doorbell
+        fallback count to — per-submission attribution that a concurrent
+        reader of the shared ``stats.fallback_doorbell`` counter cannot
+        get (QoS accounting needs exactly this submission's overflow).
         """
         n = len(calls)
         if n == 0:
             return []
-        if sq_full == "raise" and self.sq_space() < n:
-            raise RingFull(
-                f"SQ has {self.sq_space()}/{self.sq_depth} free, need {n}")
+        sysnos = np.zeros(n, dtype=np.int64)
+        args = np.zeros((n, 6), dtype=np.uint64)
+        for i, c in enumerate(calls):
+            sysnos[i] = int(c[0])
+            rest = c[1:]
+            for j in range(min(6, len(rest))):
+                args[i, j] = int(rest[j]) & 0xFFFFFFFFFFFFFFFF
+        return self._submit_arrays(sysnos, args, want_cqe=want_cqe,
+                                   hw_id=hw_id, sq_full=sq_full,
+                                   spin_timeout_s=spin_timeout_s,
+                                   fallback_out=fallback_out)
+
+    def submit_np(self, sysno, args: np.ndarray, *, want_cqe: bool = False,
+                  hw_id: int = 0, sq_full: str = "spin",
+                  spin_timeout_s: float = 5.0) -> list[Completion]:
+        """Array-native submission: ``args`` is ``[n, 6]`` uint64 (e.g. the
+        vectorized arg-join of a WORK_ITEM batch, invoke._np_join_batch);
+        ``sysno`` is a scalar or an ``[n]`` array. Skips all per-call tuple
+        and int churn — the whole batch goes slot-ward as two arrays."""
+        args = np.ascontiguousarray(args, dtype=np.uint64)
+        n = len(args)
+        if n == 0:
+            return []
+        if np.ndim(sysno) == 0:
+            sysnos = np.full(n, int(sysno), dtype=np.int64)
+        else:
+            sysnos = np.asarray(sysno, dtype=np.int64)
+        return self._submit_arrays(sysnos, args, want_cqe=want_cqe,
+                                   hw_id=hw_id, sq_full=sq_full,
+                                   spin_timeout_s=spin_timeout_s)
+
+    def _submit_arrays(self, sysnos: np.ndarray, args: np.ndarray, *,
+                       want_cqe: bool, hw_id: int, sq_full: str,
+                       spin_timeout_s: float,
+                       fallback_out: list | None = None
+                       ) -> list[Completion]:
+        n = len(sysnos)
+        reserved = sq_full == "raise"
+        if reserved:
+            # atomic check-and-reserve: concurrent raise-batches can never
+            # both pass a stale space check, and spin/doorbell submitters
+            # cannot steal the promised space before we publish into it
+            with self._sq_lock:
+                avail = (self.sq_depth - (self._sq_tail - self._sq_head)
+                         - self._sq_reserved)
+                if avail < n:
+                    raise RingFull(
+                        f"SQ has {avail}/{self.sq_depth} free, need {n}")
+                self._sq_reserved += n
         flags = SQE_WANT_CQE if want_cqe else 0
-        reqs = [(int(c[0]), [int(a) for a in c[1:]]) for c in calls]
         comps: list[Completion] = []
-        # chunk acquire->publish so a huge batch never sits on unpublished
-        # (hence unprocessable) slots while waiting for the area to free —
-        # acquiring the whole area up front would deadlock against itself
-        chunk = max(1, min(self.sq_depth, self.area.n_slots // 2))
-        for lo in range(0, n, chunk):
-            part = reqs[lo:lo + chunk]
-            tickets = self.area.acquire_post_many(part, hw_id=hw_id)
-            with self._comp_lock:
-                ud0 = self._next_ud
-                self._next_ud += len(part)
-                cs = [Completion(ud0 + i, part[i][0], self._comp_cond)
-                      for i in range(len(part))]
-                for c in cs:
-                    self._completions[c.user_data] = c
-            entries = [(t.slot, ud0 + i, flags, part[i][0])
-                       for i, t in enumerate(tickets)]
-            self._publish(entries, sq_full, spin_timeout_s)
-            comps += cs
+        published = 0
+        fell_back = 0
+        try:
+            # chunk acquire->publish so a huge batch never sits on
+            # unpublished (hence unprocessable) slots while waiting for the
+            # area to free — acquiring the whole area up front would
+            # deadlock against itself
+            chunk = max(1, min(self.sq_depth, self.area.n_slots // 2))
+            for lo in range(0, n, chunk):
+                k = min(chunk, n - lo)
+                slot_arr = self.area.acquire_post_np(
+                    sysnos[lo:lo + k], args[lo:lo + k], hw_id=hw_id)
+                part_sys = sysnos[lo:lo + k].tolist()
+                with self._comp_lock:
+                    ud0 = self._next_ud
+                    self._next_ud += k
+                    cs = [Completion(ud0 + i, part_sys[i], self._comp_cond)
+                          for i in range(k)]
+                    for c in cs:
+                        self._completions[c.user_data] = c
+                # entries travel as a [k, 4] int64 matrix so the SQ publish
+                # is pure numpy segment copies (list-of-tuples only
+                # materializes on pop, where consumers want Python ints)
+                entries = np.empty((k, 4), dtype=np.int64)
+                entries[:, 0] = slot_arr
+                entries[:, 1] = np.arange(ud0, ud0 + k, dtype=np.int64)
+                entries[:, 2] = flags
+                entries[:, 3] = sysnos[lo:lo + k]
+                fell_back += self._publish(entries, sq_full, spin_timeout_s,
+                                           reserved=reserved)
+                published += k
+                comps += cs
+        finally:
+            if reserved and published < n:
+                # an exception mid-batch must hand back the unconsumed
+                # reservation, or it shrinks every future submitter's SQ
+                with self._sq_lock:
+                    self._sq_reserved -= n - published
+        if fallback_out is not None:
+            fallback_out.append(fell_back)
         return comps
 
     def submit(self, sysno, *args, want_cqe: bool = False, hw_id: int = 0
@@ -225,15 +305,19 @@ class SyscallRing:
         return self.submit_many([(sysno, *args)], want_cqe=want_cqe,
                                 hw_id=hw_id)[0]
 
-    def _publish(self, entries, sq_full: str, spin_timeout_s: float) -> None:
-        """Move entries into the SQ (bulk), applying backpressure policy."""
+    def _publish(self, entries, sq_full: str, spin_timeout_s: float,
+                 reserved: bool = False) -> int:
+        """Move entries into the SQ (bulk), applying backpressure policy.
+        ``reserved=True`` means this batch holds a ``_sq_reserved`` claim
+        (sq_full="raise"): its pushes draw down the reservation. Returns
+        how many entries fell back to the doorbell path (0 = all rang)."""
         i = 0
         n = len(entries)
         deadline = None
         while i < n:
-            i += self._sq_push_bulk(entries[i:])
+            i += self._sq_push_bulk(entries[i:], reserved=reserved)
             if i >= n:
-                return
+                return 0
             if sq_full == "doorbell":
                 break
             # spin: bounded busy-wait for the poller to free SQ space
@@ -244,36 +328,58 @@ class SyscallRing:
             if time.monotonic() > deadline:
                 break                  # blew the bound -> doorbell fallback
             time.sleep(0)              # yield the GIL to the poller/workers
-        if i < len(entries):
+        fell_back = len(entries) - i
+        if fell_back:
             with self._stats_lock:
-                self.stats.fallback_doorbell += len(entries) - i
+                self.stats.fallback_doorbell += fell_back
             for slot, ud, fl, _sysno in entries[i:]:
                 self.executor.interrupt(
-                    slot, partial(self._complete, ud, bool(fl & SQE_WANT_CQE)),
-                    area=self.area)
+                    int(slot),
+                    partial(self._complete, int(ud),
+                            bool(int(fl) & SQE_WANT_CQE)),
+                    area=self.area,
+                    coalesce_max=self.fallback_coalesce_max)
+        return fell_back
 
-    def _sq_push_bulk(self, entries) -> int:
-        """Publish as many SQEs as fit, one lock round. Returns count."""
+    def _sq_push_bulk(self, entries, reserved: bool = False) -> int:
+        """Publish as many SQEs as fit, one lock round. Returns count.
+
+        ``entries`` is a ``[k, 4]`` int64 matrix (or anything np.asarray
+        can shape that way); the copy into the SQ arrays is two contiguous
+        numpy segment writes (pre- and post-wraparound), not a per-entry
+        Python loop. ``reserved=True`` pushes consume the caller's own
+        ``_sq_reserved`` claim; unreserved pushes must leave reserved
+        space untouched."""
+        arr = np.asarray(entries, dtype=np.int64)
         wake = False
         with self._sq_lock:
-            k = min(len(entries),
-                    self.sq_depth - (self._sq_tail - self._sq_head))
-            for i in range(k):
-                idx = (self._sq_tail + i) % self.sq_depth
-                slot, ud, fl, sysno = entries[i]
-                self._sq_slot[idx] = slot
-                self._sq_ud[idx] = ud
-                self._sq_flags[idx] = fl
-                self._sq_sysno[idx] = sysno
+            avail = self.sq_depth - (self._sq_tail - self._sq_head)
+            if not reserved:
+                avail -= self._sq_reserved
+            k = min(len(arr), max(0, avail))
+            if k and reserved:
+                self._sq_reserved -= k
             if k:
+                pos = self._sq_tail % self.sq_depth
+                first = min(k, self.sq_depth - pos)
+                for col, dst in ((0, self._sq_slot), (1, self._sq_ud),
+                                 (3, self._sq_sysno)):
+                    dst[pos:pos + first] = arr[:first, col]
+                    dst[:k - first] = arr[first:k, col]
+                self._sq_flags[pos:pos + first] = arr[:first, 2]
+                self._sq_flags[:k - first] = arr[first:k, 2]
                 self._sq_tail += k
                 # in-flight from the instant they are visible in the SQ,
                 # so drain() covers entries the poller has not seen yet
                 self.executor.add_inflight(k)
-                self.stats.submitted += k
                 if self._need_wakeup:
                     self._need_wakeup = False
                     wake = True
+        if k:
+            # submitter-side counter: same _stats_lock discipline as every
+            # other RingStats field (was mutated under _sq_lock before)
+            with self._stats_lock:
+                self.stats.submitted += k
         if wake:
             self._wakeup.set()
         return k
@@ -289,15 +395,19 @@ class SyscallRing:
             n = min(max_n, self._sq_tail - self._sq_head)
             if n == 0:
                 return []
-            entries = []
-            for i in range(n):
-                idx = (self._sq_head + i) % self.sq_depth
-                entries.append((int(self._sq_slot[idx]),
-                                int(self._sq_ud[idx]),
-                                int(self._sq_flags[idx]),
-                                int(self._sq_sysno[idx])))
-                self._sq_slot[idx] = -1
+            pos = self._sq_head % self.sq_depth
+            first = min(n, self.sq_depth - pos)
+            cols = []
+            for src in (self._sq_slot, self._sq_ud, self._sq_flags,
+                        self._sq_sysno):
+                col = src[pos:pos + first].tolist()
+                if first < n:
+                    col += src[:n - first].tolist()
+                cols.append(col)
+            self._sq_slot[pos:pos + first] = -1
+            self._sq_slot[:n - first] = -1
             self._sq_head += n
+        entries = list(zip(*cols))
         with self._stats_lock:
             self.stats.polls += 1
             self.stats.bundles += 1
@@ -309,10 +419,19 @@ class SyscallRing:
         worker pool (one queue op); ``inline=True`` processes it on the
         calling thread — io_uring SQPOLL's do-the-work-in-the-poller mode,
         which keeps a latency tenant's calls out of the shared worker queue
-        entirely (see genesys.sched)."""
-        if not entries:
+        entirely (see genesys.sched).
+
+        Rings with a :class:`~repro.core.genesys.fuse.Coalescer` attached
+        (``fuse=``) run the popped bundle through the cross-call fusion
+        pre-pass here — the step between pop and dispatch — so both the
+        PollerGroup reap path and direct process_pending() callers get
+        semantic coalescing."""
+        if not len(entries):
             return
-        batch = _RingBatch(self, entries)
+        if self.fuse is not None:
+            batch = self.fuse.bundle(self, entries)
+        else:
+            batch = _RingBatch(self, entries)
         if inline:
             ex = self.executor
             with ex._stats_lock:

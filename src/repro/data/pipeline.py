@@ -54,13 +54,19 @@ class GenesysDataLoader:
     def __init__(self, gsys: Genesys, paths: list[str], *, batch: int,
                  seq: int, prefetch_depth: int = 2,
                  straggler_deadline_s: float = 2.0, seed: int = 0,
-                 use_ring: bool = False, tenant_name: str = "prefetch"):
+                 use_ring: bool = False, tenant_name: str = "prefetch",
+                 fuse: bool = True):
         self.gsys = gsys
         self.use_ring = use_ring
         # dedicated prefetch tenant: private ring/slots, background QoS
         # (low weight + negative priority: prefetch runs ahead of
-        # consumption, so it should lose reap-order ties)
-        self._tenant = (gsys.tenant(tenant_name, weight=0.5, priority=-1)
+        # consumption, so it should lose reap-order ties). fuse=True runs
+        # the tenant's popped bundles through the genesys.fuse Coalescer:
+        # prefetches of adjacent/overlapping shard regions (and straggler
+        # double-reads landing in one bundle) merge into single preads,
+        # with identical per-read retvals/bytes.
+        self._tenant = (gsys.tenant(tenant_name, weight=0.5, priority=-1,
+                                    fuse=fuse)
                         if use_ring else None)
         self.paths = list(paths)
         self.batch = batch

@@ -8,7 +8,9 @@ syscalls (paper §7.3, generalized to a model server).
 genesys.uring rings end-to-end; ``--tenants`` additionally runs it on
 genesys.sched per-tenant rings (a high-priority receive tenant plus a
 bounded pool of hash-sharded reply tenants) with token-bucket +
-strict-priority + WFQ policies installed.
+strict-priority + WFQ policies installed; ``--batch-decode`` decodes each
+poll batch as one power-of-two bucket — one jit dispatch per token step
+for the whole bucket, replies fanned out as one multi-entry submission.
 """
 from __future__ import annotations
 
@@ -30,6 +32,9 @@ def main() -> None:
                     help="decode-loop syscalls via the genesys.uring rings")
     ap.add_argument("--tenants", action="store_true",
                     help="per-tenant rings + QoS policies (implies --use-ring)")
+    ap.add_argument("--batch-decode", action="store_true",
+                    help="bucket concurrent requests: one jit dispatch per "
+                         "token step per bucket (amortized decode)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -59,9 +64,11 @@ def main() -> None:
         stats = srv.serve_model(serve, params, cache,
                                 n_batches=args.batches,
                                 reply_port=args.reply_port,
-                                max_tokens=args.max_tokens)
+                                max_tokens=args.max_tokens,
+                                batch_decode=args.batch_decode)
     print(f"requests={stats.requests} batches={stats.batches} "
-          f"tokens={stats.tokens_out} wall={stats.wall_s:.2f}s")
+          f"tokens={stats.tokens_out} wall={stats.wall_s:.2f}s "
+          f"decode_dispatches={stats.decode_dispatches}")
     if args.tenants:
         for name, t in sorted(gsys.tenants().items()):
             print(f"tenant {name}: submitted={t.stats.submitted} "

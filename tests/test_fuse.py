@@ -1,0 +1,489 @@
+"""genesys.fuse: cross-call coalescing correctness.
+
+The contract under test (ISSUE acceptance): fused calls are semantically
+exact — per-call retvals and destination-buffer contents identical to the
+unfused path, including short reads at EOF, overlapping ranges, duplicate
+ranges, and errors. Plan-shape properties: every fused group covers
+exactly the union of its members' ranges (gaps split groups, max_span
+bounds them)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.genesys import (Coalescer, Genesys, GenesysConfig, Sys,
+                                SyscallRing)
+from repro.core.genesys.fuse import _ReadMember
+from tests.proptest import for_all
+
+FILE_BYTES = 1 << 14
+
+
+@pytest.fixture()
+def gsys():
+    g = Genesys(GenesysConfig(n_slots=4096))
+    yield g
+    g.shutdown()
+
+
+@pytest.fixture()
+def rofile(tmp_path):
+    data = np.random.default_rng(7).integers(
+        0, 256, FILE_BYTES, dtype=np.uint8)
+    path = str(tmp_path / "fuse.bin")
+    with open(path, "wb") as f:
+        f.write(data.tobytes())
+    return path, bytes(data.tobytes())
+
+
+def _open(g, path):
+    fd = g.call(Sys.OPEN, g.heap.register_bytes(path.encode()),
+                os.O_RDONLY, 0)
+    assert fd >= 0
+    return fd
+
+
+def _fused_ring(g, **kw) -> SyscallRing:
+    """Pollerless fused ring: bundle formation is deterministic — the test
+    pops exactly what it submitted, as one bundle."""
+    return SyscallRing(g.area, g.executor, sq_depth=256, start_poller=False,
+                       fuse=Coalescer(**kw))
+
+
+def _run_bundle(ring, calls):
+    comps = ring.submit_many(calls)
+    assert ring.process_pending(max_n=len(calls)) == len(calls)
+    return [c.result(timeout=10) for c in comps]
+
+
+# ------------------------------------------------------------ plan shape ----
+
+@for_all(n_cases=60, seed=3)
+def test_plan_covers_exactly_the_union_of_ranges(rng):
+    """Property: every group's [lo, hi) == union of member ranges; members
+    inside one group chain with no gaps; groups respect max_span."""
+    max_span = int(rng.integers(1024, 1 << 16))
+    c = Coalescer(max_span=max_span)
+    members = [
+        _ReadMember(i, 0, int(rng.integers(1, 2048)),
+                    int(rng.integers(0, 1 << 15)), 0, False)
+        for i in range(int(rng.integers(2, 40)))
+    ]
+    groups, _dedup = c._plan_reads({5: list(members)})
+    seen = set()
+    for fd, lo, hi, grp in groups:
+        assert fd == 5 and len(grp) >= 2
+        assert hi - lo <= max_span
+        # exact union: no byte outside a member, no gap inside
+        covered = np.zeros(hi - lo, dtype=bool)
+        for m in grp:
+            assert lo <= m.offset and m.offset + m.count <= hi
+            covered[m.offset - lo:m.offset + m.count - lo] = True
+            assert m.idx not in seen
+            seen.add(m.idx)
+        assert covered.all(), "fused span has a gap no member covers"
+
+
+# ------------------------------------------------- oracle exactness (prop) --
+
+@for_all(n_cases=25, seed=11)
+def test_fused_pread_matches_python_oracle(rng):
+    """Property: random offsets/counts (incl. past-EOF, duplicates, zero
+    counts) through a fused ring return exactly the unfused retvals and
+    bytes. Fresh Genesys per case keeps slot/heap state independent."""
+    g = Genesys(GenesysConfig(n_slots=512, n_workers=2))
+    try:
+        data = bytes(rng.integers(0, 256, FILE_BYTES, dtype=np.uint8)
+                     .tobytes())
+        import tempfile
+        path = tempfile.mktemp()
+        with open(path, "wb") as f:
+            f.write(data)
+        fd = _open(g, path)
+        ring = _fused_ring(g)
+        k = int(rng.integers(2, 32))
+        calls, oracle, bufs = [], [], []
+        for _ in range(k):
+            count = int(rng.integers(0, 1200))
+            # cluster offsets so adjacency/overlap actually happens
+            offset = int(rng.integers(0, FILE_BYTES + 2000)) \
+                if rng.random() < 0.5 else int(rng.integers(0, 4096))
+            if rng.random() < 0.2 and calls:      # exact duplicate range
+                prev = calls[int(rng.integers(0, len(calls)))]
+                count, offset = prev[3], prev[4]
+            dst_off = int(rng.integers(0, 64))
+            bh = g.heap.new_buffer(dst_off + count + 8)
+            bufs.append(bh)
+            calls.append((Sys.PREAD64, fd, bh, count, offset, dst_off))
+            ret = min(count, max(0, len(data) - offset))
+            oracle.append((ret, data[offset:offset + ret], dst_off))
+        rets = _run_bundle(ring, calls)
+        for i, (want_ret, want_bytes, dst_off) in enumerate(oracle):
+            assert rets[i] == want_ret, (i, rets[i], want_ret)
+            got = bytes(np.asarray(g.heap.resolve(bufs[i]))
+                        [dst_off:dst_off + want_ret].tobytes())
+            assert got == want_bytes, f"member {i} bytes diverge"
+        os.unlink(path)
+    finally:
+        g.shutdown()
+
+
+def test_fused_matches_actual_unfused_ring(gsys, rofile):
+    """Same workload through a fused and an UNfused ring: identical
+    retvals and destination bytes (the end-to-end oracle)."""
+    path, data = rofile
+    fd = _open(gsys, path)
+    rng = np.random.default_rng(23)
+    calls_spec = []
+    for _ in range(24):
+        count = int(rng.integers(1, 900))
+        offset = int(rng.integers(0, FILE_BYTES + 500))
+        calls_spec.append((count, offset))
+    results = {}
+    for label, ring in (("plain", SyscallRing(gsys.area, gsys.executor,
+                                              sq_depth=256,
+                                              start_poller=False)),
+                        ("fused", _fused_ring(gsys))):
+        bufs = [gsys.heap.new_buffer(c + 8) for c, _ in calls_spec]
+        calls = [(Sys.PREAD64, fd, bh, c, o, 0)
+                 for bh, (c, o) in zip(bufs, calls_spec)]
+        rets = _run_bundle(ring, calls)
+        results[label] = (rets, [bytes(np.asarray(gsys.heap.resolve(bh))
+                                       .tobytes()) for bh in bufs])
+    assert results["plain"][0] == results["fused"][0]
+    assert results["plain"][1] == results["fused"][1]
+
+
+# ----------------------------------------------------------- edge cases ----
+
+def test_short_read_splits_exactly_across_members(gsys, rofile):
+    path, data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    end = len(data)
+    bh = gsys.heap.new_buffer(2048)
+    calls = [(Sys.PREAD64, fd, bh, 400, end - 600, 0),      # full 400
+             (Sys.PREAD64, fd, bh, 400, end - 300, 400),    # short: 300
+             (Sys.PREAD64, fd, bh, 400, end + 64, 800)]     # past EOF: 0
+    # the three ranges chain ([end-600,end-200) ∪ [end-300,end+100) ∪ ...)
+    assert _run_bundle(ring, calls) == [400, 300, 0]
+    buf = np.asarray(gsys.heap.resolve(bh))
+    assert bytes(buf[:400].tobytes()) == data[end - 600:end - 200]
+    assert bytes(buf[400:700].tobytes()) == data[end - 300:end]
+    assert ring.fuse.stats.read_groups == 1
+
+
+def test_overlapping_and_duplicate_reads_dedup(gsys, rofile):
+    path, data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bufs = [gsys.heap.new_buffer(512) for _ in range(4)]
+    calls = [(Sys.PREAD64, fd, bufs[0], 512, 1024, 0),
+             (Sys.PREAD64, fd, bufs[1], 512, 1024, 0),     # duplicate
+             (Sys.PREAD64, fd, bufs[2], 512, 1280, 0),     # overlap
+             (Sys.PREAD64, fd, bufs[3], 256, 1536, 0)]     # adjacent tail
+    assert _run_bundle(ring, calls) == [512, 512, 512, 256]
+    for bh, (cnt, off) in zip(bufs, ((512, 1024), (512, 1024),
+                                     (512, 1280), (256, 1536))):
+        assert bytes(np.asarray(gsys.heap.resolve(bh))[:cnt].tobytes()) == \
+            data[off:off + cnt]
+    st = ring.fuse.stats
+    assert st.read_groups == 1 and st.deduped == 1
+    assert st.dispatches_saved == 3      # 4 members -> 1 merged read
+
+
+def test_merged_error_propagates_to_every_member(gsys):
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(256)
+    bad_fd = 987654
+    calls = [(Sys.PREAD64, bad_fd, bh, 64, 0, 0),
+             (Sys.PREAD64, bad_fd, bh, 64, 64, 64)]
+    rets = _run_bundle(ring, calls)
+    assert rets == [-9, -9]              # -EBADF, like the unfused calls
+
+
+def test_same_fd_close_or_write_bars_fusion(gsys, rofile, tmp_path):
+    """A bundle that also closes (or writes) the fd must NOT hoist that
+    fd's reads into a merged pread — they keep their serial passthrough
+    position and return exactly what the unfused ring returns."""
+    path, data = rofile
+    # close case: [pread, pread, close] — unfused reads succeed, then the
+    # fd closes; hoisting the merged read after the close would give -9
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(512)
+    calls = [(Sys.PREAD64, fd, bh, 256, 0, 0),
+             (Sys.PREAD64, fd, bh, 256, 256, 256),
+             (Sys.CLOSE, fd)]
+    assert _run_bundle(ring, calls) == [256, 256, 0]
+    assert bytes(np.asarray(gsys.heap.resolve(bh)).tobytes()) == data[:512]
+    assert ring.fuse.stats.read_groups == 0
+    # write case: [pwrite, pread, pread] on one fd — the reads must
+    # observe the write's bytes, exactly like the serial unfused order
+    import os as _os
+    wpath = str(tmp_path / "rw.bin")
+    with open(wpath, "wb") as f:
+        f.write(bytes(512))
+    ph = gsys.heap.register_bytes(wpath.encode())
+    wfd = gsys.call(Sys.OPEN, ph, _os.O_RDWR, 0o644)
+    src = gsys.heap.register(np.full(64, 7, dtype=np.uint8))
+    calls = [(Sys.PWRITE64, wfd, src, 64, 0),
+             (Sys.PREAD64, wfd, bh, 64, 0, 0),
+             (Sys.PREAD64, wfd, bh, 64, 64, 64)]
+    assert _run_bundle(ring, calls) == [64, 64, 64]
+    assert bytes(np.asarray(gsys.heap.resolve(bh))[:64].tobytes()) == \
+        bytes([7] * 64)
+    # an unrelated fd in the same bundle still fuses
+    fd2 = _open(gsys, path)
+    calls = [(Sys.PREAD64, fd2, bh, 128, 0, 0),
+             (Sys.PREAD64, fd2, bh, 128, 128, 128),
+             (Sys.CLOSE, wfd)]
+    assert _run_bundle(ring, calls) == [128, 128, 0]
+    assert ring.fuse.stats.read_groups == 1
+    gsys.call(Sys.CLOSE, fd2)
+
+
+def test_aliased_destinations_keep_submission_order(gsys, rofile):
+    """Two merged reads whose destination regions alias: the LAST
+    submitted member's bytes must win, exactly as the unfused serial
+    dispatch would leave the buffer (scatter runs in submission order,
+    not the offset-sorted merge order)."""
+    path, data = rofile
+    fd = _open(gsys, path)
+    for ring in (SyscallRing(gsys.area, gsys.executor, sq_depth=64,
+                             start_poller=False),
+                 _fused_ring(gsys)):
+        bh = gsys.heap.new_buffer(128)
+        # submitted high-offset first, low-offset second; ranges overlap
+        # so they merge, both write buf[0:100]
+        calls = [(Sys.PREAD64, fd, bh, 100, 50, 0),
+                 (Sys.PREAD64, fd, bh, 100, 0, 0)]
+        assert _run_bundle(ring, calls) == [100, 100]
+        got = bytes(np.asarray(gsys.heap.resolve(bh))[:100].tobytes())
+        assert got == data[0:100], "last submitted write must win"
+
+
+def test_out_of_range_offset_nets_eio_not_a_dead_worker(gsys, rofile):
+    """Regression: a merged pread whose offset overflows C long raises
+    OverflowError (not OSError) inside the handler; the fused dispatch
+    must net it to -EIO per member like the unfused wrapper — not escape
+    and kill the worker (which would hang every future forever)."""
+    path, _data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(256)
+    huge = 2 ** 63
+    calls = [(Sys.PREAD64, fd, bh, 64, huge, 0),
+             (Sys.PREAD64, fd, bh, 64, huge + 64, 64)]
+    assert _run_bundle(ring, calls) == [-5, -5]
+    # the worker survived: a normal call still completes
+    assert _run_bundle(ring, [(Sys.ECHO, 5), (Sys.ECHO, 6)]) == [5, 6]
+    gsys.drain()
+    assert gsys.area.in_flight() == 0
+
+
+def test_dead_handle_member_fails_alone(gsys, rofile):
+    """A member whose destination handle is dead gets -EIO; its fused
+    siblings still succeed (matches unfused per-call failure)."""
+    path, data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(256)
+    calls = [(Sys.PREAD64, fd, bh, 128, 0, 0),
+             (Sys.PREAD64, fd, 999_999, 128, 128, 0),      # dead handle
+             (Sys.PREAD64, fd, bh, 128, 256, 128)]
+    assert _run_bundle(ring, calls) == [128, -5, 128]
+    buf = np.asarray(gsys.heap.resolve(bh))
+    assert bytes(buf[:128].tobytes()) == data[:128]
+    assert bytes(buf[128:256].tobytes()) == data[256:384]
+
+
+def test_pread_fixed_members_fuse_with_plain(gsys, rofile):
+    """PREAD64 and PREAD64_FIXED on the same fd merge into one read; the
+    fixed member scatters through the pinned table, not the heap."""
+    path, data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(256)
+    fixed_buf = gsys.heap.new_buffer(256)
+    [idx] = gsys.register_buffers([fixed_buf])
+    calls = [(Sys.PREAD64, fd, bh, 256, 0, 0),
+             (Sys.PREAD64_FIXED, fd, idx, 256, 256, 0)]
+    assert _run_bundle(ring, calls) == [256, 256]
+    assert bytes(np.asarray(gsys.heap.resolve(bh)).tobytes()) == data[:256]
+    assert bytes(np.asarray(gsys.heap.resolve(fixed_buf)).tobytes()) == \
+        data[256:512]
+    assert ring.fuse.stats.read_groups == 1
+
+
+def test_gapped_ranges_do_not_merge(gsys, rofile):
+    """A byte of gap splits the run: fusing across it would read bytes no
+    member asked for; both sides still fuse internally."""
+    path, data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(4096)
+    calls = [(Sys.PREAD64, fd, bh, 256, 0, 0),
+             (Sys.PREAD64, fd, bh, 256, 256, 256),
+             (Sys.PREAD64, fd, bh, 256, 513, 512),      # 1-byte gap
+             (Sys.PREAD64, fd, bh, 256, 769, 768)]
+    assert _run_bundle(ring, calls) == [256] * 4
+    assert ring.fuse.stats.read_groups == 2
+    assert bytes(np.asarray(gsys.heap.resolve(bh))[512:768].tobytes()) == \
+        data[513:769]
+
+
+def test_max_span_bounds_merged_reads(gsys, rofile):
+    path, _data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys, max_span=1024)
+    bh = gsys.heap.new_buffer(8192)
+    calls = [(Sys.PREAD64, fd, bh, 512, i * 512, i * 512) for i in range(8)]
+    assert _run_bundle(ring, calls) == [512] * 8
+    st = ring.fuse.stats
+    assert st.read_groups == 4           # 4KB of adjacency / 1KB span cap
+    assert st.bytes_merged == 4096
+
+
+def test_mmap_size_class_batching(gsys):
+    ring = _fused_ring(gsys)
+    calls = ([(Sys.MMAP, 0, 8192)] * 4          # one 8KB class
+             + [(Sys.MMAP, 0, 4096)] * 3        # one 4KB class
+             + [(Sys.MMAP, 0, 1 << 20)])        # singleton: passthrough
+    rets = _run_bundle(ring, calls)
+    assert len(set(rets)) == len(rets) and all(r > 0 for r in rets)
+    assert ring.fuse.stats.mmap_groups == 2
+    # every fused region is real: munmap succeeds on each address
+    for addr in rets:
+        assert gsys.call(Sys.MUNMAP, addr, 0) == 0
+
+
+def test_non_fusable_calls_pass_through_in_order(gsys):
+    ring = _fused_ring(gsys)
+    calls = [(Sys.ECHO, 1), (Sys.MMAP, 0, 4096), (Sys.ECHO, 2),
+             (Sys.MMAP, 0, 4096), (Sys.ECHO, 3)]
+    rets = _run_bundle(ring, calls)
+    assert [rets[0], rets[2], rets[4]] == [1, 2, 3]
+    assert rets[1] != rets[3] and rets[1] > 0 and rets[3] > 0
+
+
+def test_fused_tenant_through_poller_group(gsys, rofile):
+    """End-to-end: Genesys.tenant(fuse=True) reaped by the shared
+    PollerGroup still returns exact results, and the coalescer actually
+    engaged (batch submissions pop as fusable bundles)."""
+    path, data = rofile
+    fd = _open(gsys, path)
+    t = gsys.tenant("fusey", fuse=True, n_slots=128, sq_depth=128)
+    bh = gsys.heap.new_buffer(64 * 128)
+    calls = [(Sys.PREAD64, fd, bh, 128, i * 128, i * 128) for i in range(64)]
+    rets = [c.result(timeout=10) for c in t.submit(calls)]
+    assert rets == [128] * 64
+    assert bytes(np.asarray(gsys.heap.resolve(bh)).tobytes()) == \
+        data[:64 * 128]
+    assert t.ring.fuse.stats.fused_calls > 0
+    gsys.close_tenant("fusey")
+
+
+def test_fuse_drain_covers_fused_bundles(gsys, rofile):
+    """drain() (the §8.3 barrier) must account fused bundles exactly:
+    in-flight hits zero, slots all come home."""
+    path, _data = rofile
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    bh = gsys.heap.new_buffer(64 * 64)
+    calls = [(Sys.PREAD64, fd, bh, 64, i * 64, i * 64) for i in range(64)]
+    comps = ring.submit_many(calls)
+    assert ring.process_pending(max_n=64) == 64
+    gsys.drain()
+    assert all(c.done() for c in comps)
+    assert gsys.area.in_flight() == 0
+
+
+# ----------------------------------------------- batched serving decode -----
+
+def test_batched_decode_matches_per_request(gsys):
+    """serve_model(batch_decode=True) must produce the same continuations
+    as the per-request path, with ~1/k the jit dispatches."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.server import (_greedy_decode, _greedy_decode_batch,
+                                      ServeStats)
+    calls = []
+
+    def serve_fn(params, cache, cur, cl):
+        calls.append(cur.shape)
+        return cur.reshape(-1) * 2 + 1, cache
+    cache = {"k": jnp.zeros((1, 1), jnp.float32)}
+    prompts = [np.asarray([3, 5], np.int32), np.asarray([7], np.int32),
+               np.asarray([11], np.int32)]
+    cl0 = jnp.zeros((1,), jnp.int32)
+    want = [_greedy_decode(serve_fn, {}, cache, cl0, p, 4) for p in prompts]
+    per_request_calls = len(calls)
+    calls.clear()
+    stats = ServeStats()
+    got = _greedy_decode_batch(serve_fn, {}, cache, prompts, 4, stats)
+    assert got == want
+    assert len(calls) == 4               # one dispatch per token step
+    assert per_request_calls == 12       # vs one per request per step
+    assert stats.decode_dispatches == 4 and stats.decode_buckets == 1
+    assert all(s == (4, 1) for s in calls)   # pow2 bucket of 3 -> 4
+
+
+def test_batched_decode_splits_oversized_batches():
+    """More prompts than MAX_DECODE_BUCKET split into several buckets
+    instead of padding one huge pow2 batch."""
+    import jax.numpy as jnp
+    from repro.serving.server import (MAX_DECODE_BUCKET, ServeStats,
+                                      _greedy_decode_batch)
+    shapes = []
+
+    def serve_fn(params, cache, cur, cl):
+        shapes.append(cur.shape[0])
+        return cur.reshape(-1) + 1, cache
+    cache = {"k": jnp.zeros((1, 1), jnp.float32)}
+    n = MAX_DECODE_BUCKET + 5
+    prompts = [np.asarray([i], np.int32) for i in range(n)]
+    stats = ServeStats()
+    gens = _greedy_decode_batch(serve_fn, {}, cache, prompts, 2, stats)
+    assert [g for g in gens] == [[i + 1, i + 2] for i in range(n)]
+    assert stats.decode_buckets == 2
+    assert max(shapes) == MAX_DECODE_BUCKET     # no monster pow2 padding
+
+
+def test_batched_decode_server_end_to_end(gsys):
+    """Full UDP server with batch_decode: replies carry the right decoded
+    tokens and the decode ran bucketed."""
+    import socket as socklib
+    import jax.numpy as jnp
+    from repro.serving.server import GenesysUdpServer
+    serve_fn = lambda params, cache, cur, cl: (cur.reshape(-1) + 1, cache)  # noqa: E731
+    cache = {"k": jnp.zeros((1, 1), jnp.float32)}
+    srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                           batch_window_s=0.05, use_tenants=True)
+    port = gsys.table._sockets[srv.fd].getsockname()[1]
+    client = socklib.socket(socklib.AF_INET, socklib.SOCK_DGRAM)
+    client.bind(("127.0.0.1", 0))
+    client.settimeout(5)
+    cport = client.getsockname()[1]
+    th = threading.Thread(
+        target=lambda: srv.serve_model(serve_fn, {}, cache, n_batches=1,
+                                       reply_port=cport, max_tokens=3,
+                                       batch_decode=True),
+        daemon=True)
+    th.start()
+    time.sleep(0.05)
+    for rid in (10, 20, 30):
+        client.sendto(np.asarray([rid], np.int32).tobytes(),
+                      ("127.0.0.1", port))
+    got = set()
+    for _ in range(3):
+        data, _ = client.recvfrom(256)
+        got.add(tuple(np.frombuffer(data, np.int32).tolist()))
+    th.join(10)
+    assert got == {(11, 12, 13), (21, 22, 23), (31, 32, 33)}
+    assert srv.stats.decode_buckets >= 1
+    assert srv.stats.decode_dispatches <= 3 * srv.stats.decode_buckets
+    srv.close()
+    client.close()

@@ -7,10 +7,11 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.genesys import (Genesys, GenesysConfig, Policy, PolicyEngine,
-                                PollerGroup, QosReject, RingFull, SlotState,
-                                StrictPriority, Sys, SyscallArea, SyscallRing,
-                                TokenBucket, WeightedFair)
+from repro.core.genesys import (Deadline, Genesys, GenesysConfig, Policy,
+                                PolicyEngine, PollerGroup, QosReject,
+                                RingFull, SlotState, StrictPriority, Sys,
+                                SyscallArea, SyscallRing, TokenBucket,
+                                WeightedFair)
 from repro.core.genesys.tenant import Tenant
 
 SLEEP_SYS = 900
@@ -538,6 +539,245 @@ def test_stats_consistency_across_worker_races():
         assert ex.ring_processed == ring_total
         assert sum(st.batch_hist.values()) == st.bundles
         assert g.area.in_flight() == 0
+    finally:
+        g.shutdown()
+
+
+def test_sq_push_counts_submitted_under_stats_lock():
+    """Regression for the stats-lock inconsistency: _sq_push_bulk used to
+    mutate stats.submitted under _sq_lock while every other RingStats
+    field took _stats_lock. The submitted counter must now be written
+    inside _stats_lock (spy lock observes the acquisition) and never
+    while _sq_lock is held (no nested-lock stats writes)."""
+
+    class _SpyLock:
+        def __init__(self, inner):
+            self.inner = inner
+            self.acquisitions = 0
+            self.held = False
+
+        def __enter__(self):
+            self.inner.acquire()
+            self.acquisitions += 1
+            self.held = True
+            return self
+
+        def __exit__(self, *exc):
+            self.held = False
+            self.inner.release()
+            return False
+
+    g = Genesys(GenesysConfig())
+    try:
+        ring = SyscallRing(g.area, g.executor, sq_depth=64,
+                           start_poller=False)
+        spy_stats = _SpyLock(threading.Lock())
+        ring._stats_lock = spy_stats
+
+        class _TrapValue:
+            """stats.submitted stand-in that asserts lock discipline on
+            every read-modify-write."""
+            def __init__(self):
+                self.v = 0
+
+            def __iadd__(self, k):
+                assert spy_stats.held, \
+                    "stats.submitted mutated outside _stats_lock"
+                assert not ring._sq_lock.locked(), \
+                    "stats.submitted mutated while holding _sq_lock"
+                self.v += k
+                return self
+
+        trap = _TrapValue()
+        ring.stats.submitted = trap
+        entries = np.zeros((8, 4), dtype=np.int64)
+        entries[:, 0] = -1
+        assert ring._sq_push_bulk(entries) == 8
+        assert trap.v == 8 and spy_stats.acquisitions == 1
+        # pop them back out so executor in-flight accounting settles
+        ring.stats.submitted = trap.v
+        assert len(ring.pop_entries(8)) == 8
+        with g.executor._inflight_lock:
+            g.executor._inflight -= 8
+    finally:
+        g.shutdown()
+
+
+# ------------------------------------------------ EDF deadline reap order ----
+
+def test_deadline_policy_orders_by_earliest_deadline():
+    """Unit: Deadline.order_key sorts the tenant with the nearest pending
+    deadline first; no-deadline tenants sort last; reaping retires stamps
+    FIFO so a drained tenant loses its preference."""
+    pol = Deadline()
+    engine = PolicyEngine([pol])
+
+    def _stub_ring():
+        return type("R", (), {"area": None})()
+    near = Tenant("near", ring=_stub_ring(), deadline_us=500.0, engine=engine)
+    far = Tenant("far", ring=_stub_ring(), deadline_us=500_000.0,
+                 engine=engine)
+    none = Tenant("none", ring=_stub_ring(), engine=engine)
+
+    class _M:
+        def __init__(self, t):
+            self.tenant = t
+    far_m, near_m, none_m = _M(far), _M(near), _M(none)
+    # no pending deadlines yet: everyone ties at +inf
+    assert pol.order_key(near) == float("inf")
+    pol.on_submit(far, [(Sys.ECHO, 1)] * 3)
+    pol.on_submit(near, [(Sys.ECHO, 1)] * 2)
+    ordered = engine.order([none_m, far_m, near_m])
+    assert [m.tenant.name for m in ordered] == ["near", "far", "none"]
+    # reap near's two entries: its stamp retires, far now leads and the
+    # drained tenant ties with the no-deadline one (stable input order)
+    pol.on_reap(near, [(0, 0, 0, int(Sys.ECHO))] * 2)
+    ordered = engine.order([none_m, far_m, near_m])
+    assert ordered[0].tenant.name == "far"
+    assert pol.order_key(near) == float("inf")
+    pol.on_close(far)
+    assert pol.order_key(far) == float("inf")
+
+
+def test_deadline_tenant_reaps_before_backlog():
+    """Integration: a near-deadline tenant submitted AFTER a no-deadline
+    tenant's backlog still completes first (EDF re-evaluated per
+    quantum)."""
+    g = Genesys(GenesysConfig(n_workers=2, sched_pollers=1,
+                              sched_inline=True, tenant_slots=512,
+                              tenant_sq_depth=512))
+    _register_sleep(g)
+    try:
+        g.use_policies(Deadline())
+        batch = g.tenant("batch")
+        edf = g.tenant("edf", deadline_us=1000.0)
+        bc = batch.submit([(SLEEP_SYS, 200)] * 128)
+        ec = edf.submit([(SLEEP_SYS, 200)] * 128)
+        for c in ec:
+            c.result(timeout=60)
+        edf_done_at = time.monotonic()
+        pending_batch = sum(not c.done() for c in bc)
+        for c in bc:
+            c.result(timeout=60)
+        batch_done_at = time.monotonic()
+        # the deadline tenant finished while at least one full quantum of
+        # the earlier-submitted backlog was still queued (the poller may
+        # legitimately finish exactly one 64-entry quantum of the backlog
+        # before the EDF batch lands), and strictly before the backlog
+        assert pending_batch >= len(bc) // 2
+        assert edf_done_at < batch_done_at
+    finally:
+        g.shutdown()
+
+
+def test_token_bucket_refunds_on_abort():
+    """Regression for the on_abort contract: tokens charged by a
+    submission that never happened (rejected by a later policy, or
+    RingFull) must come back, or retry loops drain the bucket and
+    throttle future real work."""
+    class _RejectAll(Policy):
+        def on_submit(self, tenant, calls):
+            raise QosReject("no")
+
+    tb = TokenBucket()
+    g = Genesys(GenesysConfig(tenant_sq_depth=8, tenant_slots=64))
+    try:
+        g.use_policies(tb, _RejectAll())
+        t = g.tenant("limited", rate_limit=1000.0, burst=10.0)
+        for _ in range(5):                    # 5 failed submits of 4 calls
+            with pytest.raises(QosReject):
+                t.submit([(Sys.ECHO, 1)] * 4)
+        with tb._lock:
+            tokens = tb._buckets[t.name][0]
+        assert tokens >= 9.5, f"aborted submissions drained the bucket " \
+                              f"({tokens} of 10 tokens left)"
+    finally:
+        g.shutdown()
+
+
+def test_deadline_stamps_unwind_on_reject_ringfull_and_fallback():
+    """Regression: a Deadline stamp must not outlive a submission that
+    never reaches the SQ (QosReject from a later policy, RingFull) or
+    whose tail falls back to the doorbell — a leaked stamp would pin the
+    tenant first in EDF order forever."""
+    class _RejectAll(Policy):
+        def on_submit(self, tenant, calls):
+            raise QosReject("no")
+
+    pol = Deadline()
+    g = Genesys(GenesysConfig(tenant_sq_depth=8, tenant_slots=64))
+    try:
+        g.use_policies(pol)
+        t = g.tenant("edf", deadline_us=1000.0)
+        # RingFull: sq_full="raise" on an oversized batch, nothing lands
+        g.sched.stop()
+        with pytest.raises(RingFull):
+            t.submit([(Sys.ECHO, i) for i in range(32)], sq_full="raise")
+        assert pol.order_key(t) == float("inf"), "stamp leaked on RingFull"
+        # doorbell fallback: 12 calls into an 8-deep SQ, 4 ride the
+        # doorbell and will never be reaped off the SQ
+        comps = t.submit([(Sys.ECHO, i) for i in range(12)],
+                         sq_full="doorbell")
+        assert t.ring.stats.fallback_doorbell == 4
+        with pol._lock:
+            pending = sum(c for _d, c in pol._pending.get("edf", []))
+        assert pending == 8, "fallback share of the stamp must retire"
+        g.sched.start()
+        assert [c.result(timeout=10) for c in comps] == list(range(12))
+        assert pol.order_key(t) == float("inf")     # reaps drained the rest
+        # QosReject from a later policy: the already-run Deadline unwinds
+        g.engine.add(_RejectAll())
+        with pytest.raises(QosReject):
+            t.submit([(Sys.ECHO, 1)] * 4)
+        assert pol.order_key(t) == float("inf"), "stamp leaked on reject"
+    finally:
+        g.shutdown()
+
+
+# ------------------------------------- tenant-scoped doorbell coalesce_max ---
+
+def test_interrupt_honors_per_call_coalesce_max():
+    """Executor-level: items carrying a tenant coalesce_max bound the
+    bundle they ride in — a cmax=2 stream is never coalesced deeper than
+    2 even though the global knob allows 8."""
+    g = Genesys(GenesysConfig(n_workers=1, coalesce_window_us=20_000,
+                              coalesce_max=8))
+    try:
+        area, ex = g.area, g.executor
+        tickets = []
+        for i in range(8):
+            t = area.acquire(0)
+            area.post(t, int(Sys.ECHO), [i], True)
+            tickets.append(t)
+        for t in tickets:
+            ex.interrupt(t.slot, coalesce_max=2)
+        assert [area.wait(t) for t in tickets] == list(range(8))
+        deep = [k for k in ex.stats.coalesce_hist if k > 2]
+        assert not deep, f"bundles deeper than cmax=2: {deep}"
+        assert max(ex.stats.coalesce_hist) <= 2
+    finally:
+        g.shutdown()
+
+
+def test_tenant_coalesce_max_rides_fallback_doorbell():
+    """Tenant knob end-to-end: SQ-full fallbacks from a cmax tenant carry
+    the bound into Executor.interrupt (ring.fallback_coalesce_max)."""
+    g = Genesys(GenesysConfig(coalesce_window_us=10_000, coalesce_max=8))
+    try:
+        t = g.tenant("bounded", coalesce_max=3, sq_depth=4, n_slots=64)
+        assert t.ring.fallback_coalesce_max == 3
+        # jam the SQ (no poller will drain a stopped sched), then overflow
+        g.sched.stop()
+        comps = t.submit([(Sys.ECHO, i) for i in range(12)],
+                         sq_full="doorbell")
+        assert t.ring.stats.fallback_doorbell == 8       # 12 - 4 SQ slots
+        # fallback calls complete via the doorbell path despite cmax
+        fallback = comps[4:]
+        assert [c.result(timeout=10) for c in fallback] == list(range(4, 12))
+        assert max(g.executor.stats.coalesce_hist) <= 3
+        g.sched.start()                  # let the SQ's 4 entries finish
+        for c in comps[:4]:
+            assert c.result(timeout=10) in range(4)
     finally:
         g.shutdown()
 

@@ -50,6 +50,31 @@ kernel crossings: fused group members complete together, with per-call
 retvals and buffer contents still bit-exact (weak ordering only, §8.3).
 `Genesys.drain()` is the §8.3 barrier over *all* paths, including SQ
 entries no poller has seen yet.
+
+Telemetry (``trace.py``): every path is instrumented with lifecycle
+events (SUBMIT / SQ_POP / FUSE_MERGE / DISPATCH / COMPLETE / REAP, plus
+doorbell IRQ and QoS THROTTLE/REJECT equivalents) recorded into a
+fixed-capacity wraparound event ring — off by default, enabled with
+``GenesysConfig(trace=True)`` or per tenant via
+``Genesys.tenant(name, trace=True)``. Read it three ways:
+
+* ``Genesys.telemetry()`` — one coherent snapshot merging every
+  subsystem's counters (executor / ring / sched / fuse / tenants /
+  syscall table; each copied under its own ``trace.Counters`` lock, so
+  totals always satisfy ``submitted >= completed >= reaped``) with
+  vectorized log2-bucket latency histograms per (tenant, sysno, stage):
+  ``count`` / ``p50_us`` / ``p99_us`` / ``max_us`` for the queue,
+  dispatch, service, total, and reap stages — the per-tenant p99 signal
+  the SLO-admission direction consumes;
+* ``Genesys.export_chrome_trace(path)`` — Chrome-trace/Perfetto JSON
+  with rings, pollers, workers, and tenants as tracks, per-call spans,
+  and fused bundles as member-attributed group spans;
+* ``trace.format_summary(snapshot)`` — the one-line digest
+  ``launch/serve --stats-interval`` prints.
+
+When the event ring wraps, old events are overwritten (histograms cover
+the most recent window; ``telemetry()["trace"]["dropped"]`` counts the
+loss) and the counters — which never drop — remain exact.
 """
 from repro.core.genesys.area import (
     SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,
@@ -65,6 +90,10 @@ from repro.core.genesys.sched import (
     SchedStats, StrictPriority, TokenBucket, WeightedFair,
 )
 from repro.core.genesys.tenant import Tenant, TenantStats
+from repro.core.genesys.trace import (
+    Counters, EventRing, Tracer, TraceChannel, format_summary,
+    latency_histograms, summary_dict,
+)
 from repro.core.genesys.uring import (
     RingFull, RingStats, SyscallRing,
 )
@@ -83,5 +112,7 @@ __all__ = [
     "Deadline", "Policy", "PolicyEngine", "PollerGroup", "QosReject",
     "SchedStats", "StrictPriority", "TokenBucket", "WeightedFair",
     "Tenant", "TenantStats",
+    "Counters", "EventRing", "Tracer", "TraceChannel",
+    "format_summary", "latency_histograms", "summary_dict",
     "Genesys", "Granularity", "Ordering", "GenesysConfig", "table",
 ]

@@ -123,6 +123,14 @@ class CompletionQueue:
         with self._lock:
             return (self._tail - self._head) + len(self._backlog)
 
+    def snapshot(self) -> dict:
+        """Consistent counter read (one lock round — same discipline as
+        trace.Counters.snapshot): pushed/reaped/overflows/pending."""
+        with self._lock:
+            return {"pushed": self.pushed, "reaped": self.reaped,
+                    "overflows": self.overflows,
+                    "pending": (self._tail - self._head) + len(self._backlog)}
+
     def reap(self, max_n: int = 64, timeout: float | None = None
              ) -> list[tuple[int, int]]:
         """Pop up to ``max_n`` CQEs in completion order; blocks up to

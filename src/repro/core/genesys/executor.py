@@ -28,6 +28,8 @@ from dataclasses import dataclass, field
 
 from repro.core.genesys.area import SyscallArea, SlotState
 from repro.core.genesys.syscalls import SyscallTable
+from repro.core.genesys.trace import (Counters, EV_COMPLETE, EV_DISPATCH,
+                                      EV_IRQ)
 
 
 @dataclass
@@ -55,9 +57,13 @@ class Executor:
         self.table = table
         self.coalesce_window_us = int(coalesce_window_us)
         self.coalesce_max = max(1, int(coalesce_max))
-        self.stats = ExecutorStats()
-        # stats are mutated from the dispatcher and every worker thread
-        self._stats_lock = threading.Lock()
+        # stats are mutated from the dispatcher and every worker thread;
+        # Counters is the one lock-consistent read-modify-write/snapshot
+        # discipline shared by every genesys *Stats record (trace.py)
+        self.counters = Counters(ExecutorStats())
+        self.stats = self.counters.stats
+        # doorbell-path trace channel (a trace.TraceChannel); None = off
+        self.trace = None
         self._doorbell: queue.Queue = queue.Queue()
         self._bundles: queue.Queue = queue.Queue()
         self._stop = threading.Event()
@@ -89,9 +95,15 @@ class Executor:
         under a full ``coalesce_max``-deep bundle of batch traffic."""
         with self._inflight_lock:
             self._inflight += 1
-        with self._stats_lock:
-            self.stats.interrupts += 1
-        self._doorbell.put((slot, on_complete, area, coalesce_max))
+        self.counters.add(interrupts=1)
+        tr, tseq = self.trace, 0
+        if tr is not None:
+            # doorbell calls have no ring user_data; a tracer-allocated
+            # seq threads IRQ -> DISPATCH -> COMPLETE through the bundle
+            tseq = tr.next_seq()
+            a = self.area if area is None else area
+            tr.rec(EV_IRQ, int(a.slots[slot]["sysno"]), tseq)
+        self._doorbell.put((slot, on_complete, area, coalesce_max, tseq))
 
     def add_inflight(self, n: int) -> None:
         """Account ring submissions the moment they land in the SQ, so
@@ -103,16 +115,15 @@ class Executor:
     def submit_bundle(self, bundle, *, counted: bool = False) -> None:
         """Enqueue a polling-mode bundle directly on the worker pool,
         bypassing doorbell + dispatcher (one queue op per batch). A bundle
-        is either a list of ``(slot, on_complete, area[, coalesce_max])``
-        tuples or an object with ``process(executor)`` that owns its own
+        is either a list of ``(slot, on_complete, area[, coalesce_max,
+        tseq])`` tuples or an object with ``process(executor)`` that owns its own
         accounting (the ring's batch). ``counted=True`` means
         add_inflight() already ran."""
         if not len(bundle):
             return
         if not counted:
             self.add_inflight(len(bundle))
-        with self._stats_lock:
-            self.stats.ring_bundles += 1
+        self.counters.add(ring_bundles=1)
         self._bundles.put(bundle)
 
     # -- dispatcher: interrupt handler + coalescing -----------------------------
@@ -157,10 +168,11 @@ class Executor:
                     if cmax is not None:
                         limit = min(limit, max(1, int(cmax)))
             k = len(bundle)
-            with self._stats_lock:
-                self.stats.bundles += 1
-                self.stats.coalesce_hist[k] = \
-                    self.stats.coalesce_hist.get(k, 0) + 1
+
+            def _acct(s, k=k):
+                s.bundles += 1
+                s.coalesce_hist[k] = s.coalesce_hist.get(k, 0) + 1
+            self.counters.update(_acct)
             self._bundles.put(bundle)
 
     # -- worker: Linux workqueue task -------------------------------------------
@@ -174,29 +186,38 @@ class Executor:
             if hasattr(bundle, "process"):     # polling-mode batch (ring)
                 bundle.process(self)
             else:
-                for slot, on_complete, area, *_ in bundle:  # serial (§4.2)
-                    self._process(slot, on_complete, area)
+                for slot, on_complete, area, *rest in bundle:  # serial (§4.2)
+                    self._process(slot, on_complete, area,
+                                  tseq=rest[1] if len(rest) > 1 else 0)
             dt = time.monotonic() - t0
-            with self._stats_lock:
-                self.stats.busy_s += dt
+            self.counters.add(busy_s=dt)
 
-    def _process(self, slot: int, on_complete=None, area=None) -> None:
+    def _process(self, slot: int, on_complete=None, area=None,
+                 tseq: int = 0) -> None:
         area = self.area if area is None else area
         try:
             if not area.claim_for_processing(slot):
                 return  # raced / cancelled
             rec = area.slots[slot]
+            tr = self.trace
+            sysno = int(rec["sysno"])
+            if tr is not None and tseq:
+                tr.rec(EV_DISPATCH, sysno, tseq, aux=tr.thread_aux())
             try:
-                ret = self.table.dispatch(int(rec["sysno"]), rec["args"])
+                ret = self.table.dispatch(sysno, rec["args"])
             except Exception:            # non-OSError handler failure: the
                 ret = -5                 # caller sees -EIO, the slot and
             area.complete(slot, ret)        # worker thread stay healthy
+            # counters before on_complete: on_complete pushes the CQE, so
+            # a snapshot can never observe more reaped than processed
+            if on_complete is not None:
+                self.counters.add(processed=1, ring_processed=1)
+            else:
+                self.counters.add(processed=1)
+            if tr is not None and tseq:
+                tr.rec(EV_COMPLETE, sysno, tseq)
             if on_complete is not None:
                 on_complete(slot, ret)
-            with self._stats_lock:
-                self.stats.processed += 1
-                if on_complete is not None:
-                    self.stats.ring_processed += 1
         finally:
             with self._inflight_lock:
                 self._inflight -= 1

@@ -43,12 +43,13 @@ direct ``process_pending()`` callers fuse identically.
 """
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.genesys.syscalls import Sys
+from repro.core.genesys.trace import (Counters, EV_COMPLETE, EV_DISPATCH,
+                                      EV_FUSE_MERGE)
 
 _U64 = 0xFFFFFFFFFFFFFFFF
 
@@ -100,16 +101,17 @@ class Coalescer:
     def __init__(self, *, max_span: int = 8 << 20, min_group: int = 2):
         self.max_span = int(max_span)
         self.min_group = max(2, int(min_group))
-        self.stats = FuseStats()
-        self._stats_lock = threading.Lock()
+        self.counters = Counters(FuseStats())
+        self.stats = self.counters.stats
+        # merged-group ids for FUSE_MERGE event attribution (under the
+        # counters lock, so no extra lock and no torn ids)
+        self._next_gid = 1
 
     # -- planning ---------------------------------------------------------------
     def _pass_through(self, ring, entries):
         """Nothing fused: account the bundle and hand back a plain batch."""
         from repro.core.genesys.uring import _RingBatch
-        with self._stats_lock:
-            self.stats.bundles += 1
-            self.stats.calls_in += len(entries)
+        self.counters.add(bundles=1, calls_in=len(entries))
         return _RingBatch(ring, entries)
 
     def bundle(self, ring, entries):
@@ -160,7 +162,8 @@ class Coalescer:
         for _cls, idxs in mmap_groups:
             grouped.update(idxs)
         passthrough = [i for i in range(n) if i not in grouped]
-        with self._stats_lock:
+        n_groups = len(read_groups) + len(mmap_groups)
+        with self.counters.lock:
             st = self.stats
             st.bundles += 1
             st.fused_bundles += 1
@@ -169,9 +172,25 @@ class Coalescer:
             st.read_groups += len(read_groups)
             st.mmap_groups += len(mmap_groups)
             st.deduped += deduped
-            st.dispatches_saved += (len(grouped) - len(read_groups)
-                                    - len(mmap_groups))
+            st.dispatches_saved += len(grouped) - n_groups
             st.bytes_merged += sum(hi - lo for _f, lo, hi, _m in read_groups)
+            gid0 = self._next_gid
+            self._next_gid += n_groups
+        tr = ring.trace
+        if tr is not None:
+            # bundle -> member attribution: each member's user_data tagged
+            # with its merged-group id (aux), so the exporter can render
+            # the fused span with its member list
+            gid = gid0
+            for _fd, _lo, _hi, members in read_groups:
+                tr.rec_block(EV_FUSE_MERGE,
+                             [entries[m.idx][3] for m in members],
+                             [entries[m.idx][1] for m in members], aux=gid)
+                gid += 1
+            for _cls, idxs in mmap_groups:
+                tr.rec_block(EV_FUSE_MERGE, [entries[i][3] for i in idxs],
+                             [entries[i][1] for i in idxs], aux=gid)
+                gid += 1
         return _FusedBatch(ring, entries, read_groups, mmap_groups,
                            passthrough)
 
@@ -244,7 +263,21 @@ class _FusedBatch:
         slots = [e[0] for e in entries]
         n = len(entries)
         rets = [0] * n
+        tr = ring.trace
+        tr_sys = tr_ud = None
+        if tr is not None:
+            # shared by DISPATCH and COMPLETE (own=True: never mutated);
+            # reuse the pop's column arrays when the bundle carries them
+            cols = getattr(entries, "trace_cols", None)
+            if cols is not None:
+                tr_sys, tr_ud = cols
+            else:
+                tr_sys = [e[3] for e in entries]
+                tr_ud = [e[1] for e in entries]
         try:
+            if tr is not None:
+                tr.rec_block(EV_DISPATCH, tr_sys, tr_ud,
+                             aux=tr.thread_aux(), own=True)
             area.claim_many(slots)
             recs = area.slots
             for i in self.passthrough:
@@ -258,10 +291,12 @@ class _FusedBatch:
             for cls, idxs in self.mmap_groups:
                 self._run_mmap_group(table, cls, idxs, rets)
             area.complete_many(slots, rets)
+            # counters + COMPLETE events before futures/CQEs become
+            # visible (same discipline as _RingBatch.process)
+            ex.counters.add(processed=n, ring_processed=n)
+            if tr is not None:
+                tr.rec_block(EV_COMPLETE, tr_sys, tr_ud, own=True)
             ring._complete_batch(entries, rets)
-            with ex._stats_lock:
-                ex.stats.processed += n
-                ex.stats.ring_processed += n
         finally:
             # mirror _RingBatch.process(): in-flight accounting survives
             # any failure, so drain()/shutdown() can never hang

@@ -42,6 +42,7 @@ from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.sched import PolicyEngine, PollerGroup
 from repro.core.genesys.syscalls import SyscallTable, make_default_table
 from repro.core.genesys.tenant import Tenant
+from repro.core.genesys.trace import Tracer
 from repro.core.genesys.uring import SyscallRing
 
 
@@ -80,6 +81,10 @@ class GenesysConfig:
     # genesys.fuse: cross-call coalescing of popped ring bundles
     ring_fuse: bool = False       # fuse the shared ring's bundles
     fuse_max_span: int = 8 << 20  # merged-read byte-span bound
+    # genesys.trace: lifecycle telemetry (off by default; when the event
+    # ring wraps, histograms degrade gracefully — counters never drop)
+    trace: bool = False
+    trace_capacity: int = 1 << 16  # event-ring entries (32 B each)
 
 
 # ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
@@ -188,6 +193,11 @@ class Genesys:
         self.engine = PolicyEngine()
         self._tenants: dict[str, Tenant] = {}
         self._sched: PollerGroup | None = None
+        # genesys.trace: one tracer shared by every channel (doorbell
+        # executor, shared ring, tenant rings); None = tracing off
+        self._tracer: Tracer | None = None
+        if config.trace:
+            self._tracer_locked()
 
     @property
     def ring(self) -> SyscallRing:
@@ -205,6 +215,8 @@ class Genesys:
                     sq_depth=c.ring_sq_depth, cq_depth=c.ring_cq_depth,
                     batch_max=c.ring_batch_max, spin_polls=c.ring_spin_polls,
                     max_sleep_s=c.ring_max_sleep_s, fuse=fuse)
+                if self._tracer is not None:
+                    self._ring.trace = self._tracer.channel("ring")
             return self._ring
 
     # ------------- host-side path (used by substrates & the executor itself) --
@@ -266,6 +278,80 @@ class Genesys:
             self._sched.start()
         return self._sched
 
+    # ------------- genesys.trace: telemetry ------------------------------------
+    def _tracer_locked(self) -> Tracer:
+        """Create the shared tracer on first demand and wire the executor's
+        doorbell channel (callers hold ``self._lock`` or are ``__init__``)."""
+        if self._tracer is None:
+            self._tracer = Tracer(self.config.trace_capacity)
+            self.executor.trace = self._tracer.channel("doorbell")
+        return self._tracer
+
+    @property
+    def tracer(self) -> Tracer | None:
+        """The shared lifecycle tracer, or ``None`` when tracing is off."""
+        return self._tracer
+
+    def telemetry(self) -> dict:
+        """One coherent observability snapshot: every subsystem's counters
+        (executor, shared ring + fuse, scheduler, syscall table, tenants)
+        merged with the per-(tenant, sysno, stage) latency histograms.
+
+        Counter reads are downstream-first (reap -> completion ->
+        submission) and each record is copied under its own Counters lock,
+        so the totals always satisfy ``submitted >= completed >= reaped``
+        — no transient over-claims, even while submitters, pollers, and
+        workers are running full tilt.
+        """
+        with self._lock:
+            ring = self._ring
+            sched = self._sched
+            tenants = dict(self._tenants)
+            tracer = self._tracer
+        # downstream first: reaped before completed before submitted, so
+        # monotone counters can only make the invariant slacker, not break
+        rings = ([("ring", ring)] if ring is not None else []) + \
+            [(t.name, t.ring) for t in tenants.values()]
+        cq = {name: r.cq.snapshot() for name, r in rings}
+        reaped = sum(s["reaped"] for s in cq.values())
+        ex = self.executor.counters.snapshot()
+        completed = ex["processed"]
+        ring_snaps = {name: r.counters.snapshot() for name, r in rings}
+        submitted = ex["interrupts"] + sum(s["submitted"]
+                                           for s in ring_snaps.values())
+        out = {
+            "totals": {"submitted": submitted, "completed": completed,
+                       "reaped": reaped},
+            "executor": ex,
+            "syscalls": self.table.counters.snapshot(),
+            "ring": ring_snaps.get("ring"),
+            "cq": cq.get("ring"),
+            "fuse": (ring.fuse.counters.snapshot()
+                     if ring is not None and ring.fuse is not None else None),
+            "sched": sched.counters.snapshot() if sched is not None else None,
+            "tenants": {},
+            "histograms": tracer.histograms() if tracer is not None else {},
+            "trace": tracer.meta() if tracer is not None
+            else {"enabled": False},
+        }
+        for name, t in tenants.items():
+            out["tenants"][name] = {
+                "stats": t.counters.snapshot(),
+                "ring": ring_snaps.get(name),
+                "cq": cq.get(name),
+                "fuse": (t.ring.fuse.counters.snapshot()
+                         if t.ring.fuse is not None else None),
+            }
+        return out
+
+    def export_chrome_trace(self, path: str) -> dict | None:
+        """Write the tracer's Chrome-trace/Perfetto JSON to ``path`` (see
+        :meth:`Tracer.export_chrome_trace`); no-op when tracing is off."""
+        tracer = self._tracer
+        if tracer is None:
+            return None
+        return tracer.export_chrome_trace(path)
+
     def use_policies(self, *policies) -> PolicyEngine:
         """Install gpu_ext-style QoS policies (sched.Policy instances) on
         the shared engine; they apply to every tenant's submissions and to
@@ -279,7 +365,8 @@ class Genesys:
                n_slots: int | None = None, sq_depth: int | None = None,
                batch_max: int | None = None, fuse: bool = False,
                deadline_us: float | None = None,
-               coalesce_max: int | None = None) -> Tenant:
+               coalesce_max: int | None = None,
+               trace: bool = False) -> Tenant:
         """Get or create the named tenant: a private SyscallRing over a
         carved partition of the slot area, registered with the shared
         PollerGroup and policy engine. Re-requesting a name returns the
@@ -290,7 +377,9 @@ class Genesys:
         preads, deduped reads, batched mmaps). ``deadline_us`` is the
         EDF knob the :class:`~repro.core.genesys.sched.Deadline` policy
         reads; ``coalesce_max`` bounds interrupt coalescing for this
-        tenant's doorbell-fallback calls."""
+        tenant's doorbell-fallback calls; ``trace=True`` turns lifecycle
+        tracing on for this tenant's ring (creating the shared tracer on
+        first use even when ``GenesysConfig.trace`` is off)."""
         c = self.config
         with self._lock:
             t = self._tenants.get(name)
@@ -310,6 +399,8 @@ class Genesys:
                 cq_depth=c.tenant_cq_depth,
                 batch_max=batch_max or c.ring_batch_max,
                 start_poller=False, fuse=ring_fuse)
+            if trace or self._tracer is not None:
+                ring.trace = self._tracer_locked().channel(name)
             t = Tenant(name, ring, weight=weight, priority=priority,
                        rate_limit=rate_limit, burst=burst, engine=self.engine,
                        deadline_us=deadline_us, coalesce_max=coalesce_max)

@@ -44,6 +44,8 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
+from repro.core.genesys.trace import Counters
+
 
 class QosReject(RuntimeError):
     """A policy refused admission of a submission (e.g. rate limit in
@@ -471,8 +473,8 @@ class PollerGroup:
         self.spin_polls = max(1, int(spin_polls))
         self.max_sleep_s = float(max_sleep_s)
         self.name = name
-        self.stats = SchedStats()
-        self._stats_lock = threading.Lock()
+        self.counters = Counters(SchedStats())
+        self.stats = self.counters.stats
         self._members: list[_Member] = []
         self._members_lock = threading.Lock()
         self._rr = 0
@@ -544,19 +546,24 @@ class PollerGroup:
                  if self.engine is not None else default_q)
             entries = m.ring.pop_entries(q)
             if not entries:
-                m.ring.stats.empty_polls += 1   # unlocked, like the counter
-                continue                        # churn it replaces
+                m.ring.counters.add(empty_polls=1)
+                continue
             m.ring.dispatch_entries(entries, inline=self.inline)
             if self.engine is not None and m.tenant is not None:
                 self.engine.reaped(m.tenant, entries)
             n = len(entries)
-            with self._stats_lock:
-                self.stats.served_bundles += 1
-                self.stats.served_entries += n
+
+            def _acct(s, m=m, n=n):
+                s.served_bundles += 1
+                s.served_entries += n
                 if m.tenant is not None:
-                    pt = self.stats.per_tenant
+                    pt = s.per_tenant
                     pt[m.tenant.name] = pt.get(m.tenant.name, 0) + n
-                    m.tenant.stats.reaped += n
+            self.counters.update(_acct)
+            if m.tenant is not None:
+                # the tenant's own counters, under the tenant's own lock
+                # (no more cross-module writes under the poller's lock)
+                m.tenant.counters.add(reaped=n)
             return n
         return 0
 
@@ -564,10 +571,10 @@ class PollerGroup:
         idle = 0
         while not self._stop.is_set():
             n = self._poll_once()
-            with self._stats_lock:
-                self.stats.rounds += 1
-                if n == 0:
-                    self.stats.idle_rounds += 1
+            if n == 0:
+                self.counters.add(rounds=1, idle_rounds=1)
+            else:
+                self.counters.add(rounds=1)
             if n:
                 idle = 0
                 continue
@@ -593,11 +600,9 @@ class PollerGroup:
                         m.ring._need_wakeup = False
                 idle = 0
                 continue
-            with self._stats_lock:
-                self.stats.parks += 1
+            self.counters.add(parks=1)
             if self._wakeup.wait(timeout=self.max_sleep_s):
-                with self._stats_lock:
-                    self.stats.wakeups += 1
+                self.counters.add(wakeups=1)
             for m in members:
                 with m.ring._sq_lock:
                     m.ring._need_wakeup = False

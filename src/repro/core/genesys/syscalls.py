@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
+from repro.core.genesys.trace import Counters
 
 
 class Sys(IntEnum):
@@ -67,8 +68,10 @@ class SyscallTable:
         self._handlers: dict[int, Handler] = {}
         self._fd_lock = threading.Lock()
         self._sockets: dict[int, socket.socket] = {}
-        self.stats: dict[str, int] = {}
-        self._stats_lock = threading.Lock()   # dispatch runs on all workers
+        # dispatch runs on all workers; Counters is the shared genesys
+        # stats discipline (one lock for mutation AND snapshot)
+        self.counters = Counters({})
+        self.stats: dict[str, int] = self.counters.stats
         # registered buffers: append-only index table; reads are lock-free
         # (list indexing is atomic under the GIL), which is the whole point
         self._fixed: list = []
@@ -90,8 +93,7 @@ class SyscallTable:
         if fn is None:
             return -38  # -ENOSYS
         name = _SYS_NAMES.get(sysno) or str(sysno)
-        with self._stats_lock:
-            self.stats[name] = self.stats.get(name, 0) + 1
+        self.counters.bump(name)
         if isinstance(args, np.ndarray):
             args = args.tolist()        # one C-level conversion, not 6 int()s
         else:

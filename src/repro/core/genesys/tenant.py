@@ -26,13 +26,13 @@ partition, registers the ring with the shared
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 
 from repro.core.genesys.area import SyscallArea
 from repro.core.genesys.completion import Completion
 from repro.core.genesys.sched import PolicyEngine, QosReject
+from repro.core.genesys.trace import Counters, EV_REJECT, EV_THROTTLE
 from repro.core.genesys.uring import SyscallRing
 
 
@@ -73,10 +73,10 @@ class Tenant:
         if coalesce_max is not None:
             ring.fallback_coalesce_max = int(coalesce_max)
         self.engine = engine if engine is not None else PolicyEngine()
-        self.stats = TenantStats()
-        # submit() may be called from many threads; counters are
-        # read-modify-write (same discipline as ExecutorStats/RingStats)
-        self._stats_lock = threading.Lock()
+        # submit() may be called from many threads; Counters gives every
+        # mutation and snapshot the same lock (trace.Counters discipline)
+        self.counters = Counters(TenantStats())
+        self.stats = self.counters.stats
 
     # -- submission ------------------------------------------------------------
     def submit(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
@@ -91,24 +91,37 @@ class Tenant:
         if not calls:
             return []
         n = len(calls)
+        tr = self.ring.trace
         try:
             delay = self.engine.admit(self, calls)
         except QosReject:
-            with self._stats_lock:
-                self.stats.rejected += n
+            self.counters.add(rejected=n)
+            if tr is not None:
+                tr.rec(EV_REJECT, int(calls[0][0]), tr.next_seq(), aux=n)
             raise
         if delay > 0:
-            with self._stats_lock:
-                self.stats.throttled += n
-                self.stats.throttle_s += delay
+            self.counters.add(throttled=n, throttle_s=delay)
+            if tr is not None:
+                tr.rec(EV_THROTTLE, int(calls[0][0]), tr.next_seq(),
+                       aux=int(delay * 1e6))
             time.sleep(delay)
         if sq_full is None:
             sq_full = "spin"
             deficit = n - self.ring.sq_space()
             if deficit > 0:
-                with self._stats_lock:
-                    self.stats.sq_full_events += 1
+                self.counters.add(sq_full_events=1)
                 sq_full = self.engine.overflow_policy(self, deficit) or "spin"
+        # pre-account the submission, roll back on failure: submitted only
+        # ever leads completion, so a concurrent snapshot can never show
+        # reaped > submitted for this tenant
+
+        def _acct(s, sign=1):
+            s.submitted += sign * n
+            per = s.per_sysno
+            for c in calls:
+                sn = int(c[0])
+                per[sn] = per.get(sn, 0) + sign
+        self.counters.update(_acct)
         # fallback_out gives THIS submission's doorbell-fallback count;
         # diffing the ring's shared counter would misattribute concurrent
         # submitters' fallbacks and double-retire policy state
@@ -120,20 +133,15 @@ class Tenant:
         except Exception:
             # nothing was submitted (RingFull et al.): policies roll back
             # per-submission state (e.g. a Deadline stamp) or it would
-            # skew the reap order forever
+            # skew the reap order forever — and the pre-account unwinds
             self.engine.aborted(self, calls)
+            self.counters.update(lambda s: _acct(s, sign=-1))
             raise
         fb_delta = sum(fb)
         if fb_delta > 0:
             # overflow calls rode the doorbell: pollers will never reap
             # them off the SQ, so reap-side policy accounting settles now
             self.engine.fell_back(self, fb_delta)
-        with self._stats_lock:
-            self.stats.submitted += n
-            per = self.stats.per_sysno
-            for c in calls:
-                s = int(c[0])
-                per[s] = per.get(s, 0) + 1
         return comps
 
     def call(self, sysno: int, *args, hw_id: int = 0,

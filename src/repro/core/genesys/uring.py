@@ -53,6 +53,9 @@ import numpy as np
 from repro.core.genesys.area import SyscallArea
 from repro.core.genesys.completion import Completion, CompletionQueue
 from repro.core.genesys.executor import Executor
+from repro.core.genesys.trace import (Counters, EV_COMPLETE, EV_DISPATCH,
+                                      EV_FALLBACK, EV_REAP, EV_SQ_POP,
+                                      EV_SUBMIT)
 
 SQE_WANT_CQE = 0x1     # post a CQE to the CQ ring (besides the future)
 
@@ -77,6 +80,14 @@ class RingStats:
         if not n:
             return 0.0
         return sum(k * v for k, v in self.batch_hist.items()) / n
+
+
+class _Popped(list):
+    """A popped bundle (list of SQE tuples) that can carry the tracer's
+    per-bundle column arrays so downstream DISPATCH/COMPLETE records
+    reuse them instead of rebuilding from the tuples."""
+
+    __slots__ = ("trace_cols",)
 
 
 class _RingBatch:
@@ -104,7 +115,21 @@ class _RingBatch:
         area, table = ring.area, ex.table
         slots = [e[0] for e in self.entries]
         n = len(slots)
+        tr = ring.trace
+        tr_sys = tr_ud = None
+        if tr is not None:
+            # shared by DISPATCH and COMPLETE (staged by reference via
+            # own=True; never mutated): the pop's columns when available
+            cols = getattr(self.entries, "trace_cols", None)
+            if cols is not None:
+                tr_sys, tr_ud = cols
+            else:
+                tr_sys = [e[3] for e in self.entries]
+                tr_ud = [e[1] for e in self.entries]
         try:
+            if tr is not None:
+                tr.rec_block(EV_DISPATCH, tr_sys, tr_ud,
+                             aux=tr.thread_aux(), own=True)
             area.claim_many(slots)
             recs = area.slots
             rets = []
@@ -116,10 +141,12 @@ class _RingBatch:
                     ret = -5             # OSError net: surface -EIO, keep
                 rets.append(ret)         # the worker and the bundle alive
             area.complete_many(slots, rets)
+            # counters + COMPLETE events before futures/CQEs become
+            # visible, so a snapshot can never show reaped > processed
+            ex.counters.add(processed=n, ring_processed=n)
+            if tr is not None:
+                tr.rec_block(EV_COMPLETE, tr_sys, tr_ud, own=True)
             ring._complete_batch(self.entries, rets)
-            with ex._stats_lock:
-                ex.stats.processed += n
-                ex.stats.ring_processed += n
         finally:
             # mirror _process(): in-flight accounting survives any failure,
             # so drain()/shutdown() can never hang on a dead bundle
@@ -153,7 +180,10 @@ class SyscallRing:
         # fallbacks (the paper's coalesce_max sysfs knob, tenant-scoped)
         self.fallback_coalesce_max = fallback_coalesce_max
         self.cq = CompletionQueue(cq_depth)
-        self.stats = RingStats()
+        self.counters = Counters(RingStats())
+        self.stats = self.counters.stats
+        # lifecycle trace channel (a trace.TraceChannel); None = off
+        self.trace = None
         # SQ ring: slot index + user_data + flags + sysno per entry
         # ("shared memory"; sysno rides along so pollers can do per-sysno
         # QoS cost accounting without touching the slot area)
@@ -174,7 +204,6 @@ class SyscallRing:
         self._completions: dict[int, Completion] = {}
         self._comp_lock = threading.Lock()
         self._comp_cond = threading.Condition()
-        self._stats_lock = threading.Lock()   # submitter-side counters
         # the reaper is a single-member PollerGroup (genesys.sched); tenant
         # rings pass start_poller=False and are reaped by a shared group
         # instead, so they get no private poller at all
@@ -185,6 +214,17 @@ class SyscallRing:
             self.poller.start()
         else:
             self.poller = None
+
+    @property
+    def _stats_lock(self):
+        """The stats lock IS the Counters lock: every RingStats mutation
+        and snapshot shares one lock, so reads are never torn. Assignable
+        so tests can interpose a spy lock."""
+        return self.counters.lock
+
+    @_stats_lock.setter
+    def _stats_lock(self, lock) -> None:
+        self.counters.lock = lock
 
     # -- submission (device side) ---------------------------------------------
     def submit_many(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
@@ -200,9 +240,11 @@ class SyscallRing:
         unless the whole batch fits up front; nothing is submitted).
 
         ``fallback_out``: optional list this call appends ITS OWN doorbell
-        fallback count to — per-submission attribution that a concurrent
-        reader of the shared ``stats.fallback_doorbell`` counter cannot
-        get (QoS accounting needs exactly this submission's overflow).
+        fallback count to — per-submission attribution (QoS accounting
+        needs exactly this submission's overflow, which the shared
+        aggregate ``stats.fallback_doorbell`` counter by definition does
+        not break out; snapshot reads of the aggregate are consistent —
+        every mutation and read goes through ``counters``'s one lock).
         """
         n = len(calls)
         if n == 0:
@@ -286,6 +328,13 @@ class SyscallRing:
                 entries[:, 1] = np.arange(ud0, ud0 + k, dtype=np.int64)
                 entries[:, 2] = flags
                 entries[:, 3] = sysnos[lo:lo + k]
+                tr = self.trace
+                if tr is not None:
+                    # keyed by user_data: the seq every later lifecycle
+                    # event (pop/dispatch/complete/reap) carries. own=True:
+                    # this chunk matrix is local and never written again
+                    tr.rec_block(EV_SUBMIT, entries[:, 3], entries[:, 1],
+                                 own=True)
                 fell_back += self._publish(entries, sq_full, spin_timeout_s,
                                            reserved=reserved)
                 published += k
@@ -322,16 +371,17 @@ class SyscallRing:
                 break
             # spin: bounded busy-wait for the poller to free SQ space
             if deadline is None:
-                with self._stats_lock:
-                    self.stats.sq_full_spins += 1
+                self.counters.add(sq_full_spins=1)
                 deadline = time.monotonic() + spin_timeout_s
             if time.monotonic() > deadline:
                 break                  # blew the bound -> doorbell fallback
             time.sleep(0)              # yield the GIL to the poller/workers
         fell_back = len(entries) - i
         if fell_back:
-            with self._stats_lock:
-                self.stats.fallback_doorbell += fell_back
+            self.counters.add(fallback_doorbell=fell_back)
+            tr = self.trace
+            if tr is not None:
+                tr.rec_block(EV_FALLBACK, entries[i:, 3], entries[i:, 1])
             for slot, ud, fl, _sysno in entries[i:]:
                 self.executor.interrupt(
                     int(slot),
@@ -351,6 +401,12 @@ class SyscallRing:
         ``_sq_reserved`` claim; unreserved pushes must leave reserved
         space untouched."""
         arr = np.asarray(entries, dtype=np.int64)
+        # pre-account the attempt and reconcile the shortfall after:
+        # submitted only ever leads the SQ (never trails), so a concurrent
+        # snapshot can never observe processed > submitted. Both writes sit
+        # outside _sq_lock (no nested-lock stats mutation), and in the
+        # common all-fit case this is one _stats_lock round, same as before.
+        self.counters.add(submitted=len(arr))
         wake = False
         with self._sq_lock:
             avail = self.sq_depth - (self._sq_tail - self._sq_head)
@@ -375,11 +431,10 @@ class SyscallRing:
                 if self._need_wakeup:
                     self._need_wakeup = False
                     wake = True
-        if k:
-            # submitter-side counter: same _stats_lock discipline as every
-            # other RingStats field (was mutated under _sq_lock before)
-            with self._stats_lock:
-                self.stats.submitted += k
+        if k < len(arr):
+            # hand back the pre-account for entries that did not fit (the
+            # caller will retry them or route them to the doorbell path)
+            self.counters.add(submitted=k - len(arr))
         if wake:
             self._wakeup.set()
         return k
@@ -407,11 +462,22 @@ class SyscallRing:
             self._sq_slot[pos:pos + first] = -1
             self._sq_slot[:n - first] = -1
             self._sq_head += n
-        entries = list(zip(*cols))
-        with self._stats_lock:
-            self.stats.polls += 1
-            self.stats.bundles += 1
-            self.stats.batch_hist[n] = self.stats.batch_hist.get(n, 0) + 1
+        entries = _Popped(zip(*cols))
+
+        def _acct(s, n=n):
+            s.polls += 1
+            s.bundles += 1
+            s.batch_hist[n] = s.batch_hist.get(n, 0) + 1
+        self.counters.update(_acct)
+        tr = self.trace
+        if tr is not None:
+            # the pop's own column lists, shared (never mutated) by this
+            # SQ_POP record and the batch's DISPATCH/COMPLETE records —
+            # zero per-event work here; numpy conversion happens lazily
+            # on the telemetry read path
+            entries.trace_cols = (cols[3], cols[1])
+            tr.rec_block(EV_SQ_POP, cols[3], cols[1],
+                         aux=tr.thread_aux(), own=True)
         return entries
 
     def dispatch_entries(self, entries, *, inline: bool = False) -> None:
@@ -434,8 +500,7 @@ class SyscallRing:
             batch = _RingBatch(self, entries)
         if inline:
             ex = self.executor
-            with ex._stats_lock:
-                ex.stats.ring_bundles += 1
+            ex.counters.add(ring_bundles=1)
             batch.process(ex)
         else:
             self.executor.submit_bundle(batch, counted=True)
@@ -469,6 +534,11 @@ class SyscallRing:
         """Per-call completion callback (doorbell-fallback path only)."""
         with self._comp_lock:
             comp = self._completions.pop(ud, None)
+        tr = self.trace
+        if tr is not None:
+            # pairs with this call's SUBMIT (same user_data), closing the
+            # "total" stage even though the call detoured via the doorbell
+            tr.rec(EV_COMPLETE, comp.sysno if comp is not None else -1, ud)
         if comp is not None:
             comp.set_result(retval)
         if want_cqe:
@@ -479,7 +549,13 @@ class SyscallRing:
              ) -> list[tuple[int, int]]:
         """Drain up to ``max_n`` CQEs (completion order — out-of-order
         relative to submission)."""
-        return self.cq.reap(max_n, timeout=timeout)
+        cqes = self.cq.reap(max_n, timeout=timeout)
+        tr = self.trace
+        if tr is not None and cqes:
+            # a CQE carries only (user_data, retval); sysno attribution
+            # comes from the COMPLETE side of the pair at analysis time
+            tr.rec_block(EV_REAP, -1, [c[0] for c in cqes], own=True)
+        return cqes
 
     def sq_space(self) -> int:
         with self._sq_lock:

@@ -15,6 +15,8 @@ for the whole bucket, replies fanned out as one multi-entry submission.
 from __future__ import annotations
 
 import argparse
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -35,11 +37,17 @@ def main() -> None:
     ap.add_argument("--batch-decode", action="store_true",
                     help="bucket concurrent requests: one jit dispatch per "
                          "token step per bucket (amortized decode)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable genesys.trace lifecycle telemetry and "
+                         "write a Chrome-trace/Perfetto JSON here on exit")
+    ap.add_argument("--stats-interval", type=float, default=0.0, metavar="N",
+                    help="print a one-line telemetry summary (throughput, "
+                         "per-tenant p99, fuse ratio) every N seconds")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.core.genesys import (Genesys, GenesysConfig, StrictPriority,
-                                    TokenBucket, WeightedFair)
+                                    TokenBucket, WeightedFair, format_summary)
     from repro.launch.mesh import make_host_mesh
     from repro.models.registry import get_api
     from repro.serving.server import GenesysUdpServer
@@ -49,9 +57,24 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    gsys = Genesys(GenesysConfig(n_workers=2, sched_pollers=2))
+    gsys = Genesys(GenesysConfig(n_workers=2, sched_pollers=2,
+                                 trace=args.trace_out is not None))
     if args.tenants:
         gsys.use_policies(TokenBucket(), StrictPriority(), WeightedFair())
+
+    stop_stats = threading.Event()
+    reporter = None
+    if args.stats_interval > 0:
+        def _report() -> None:
+            prev, prev_t = None, time.monotonic()
+            while not stop_stats.wait(args.stats_interval):
+                snap = gsys.telemetry()
+                now = time.monotonic()
+                print(format_summary(snap, prev, now - prev_t), flush=True)
+                prev, prev_t = snap, now
+        reporter = threading.Thread(target=_report, daemon=True,
+                                    name="serve-stats")
+        reporter.start()
     mesh = make_host_mesh()
     rules = rules_for(cfg, mesh)
     api = get_api(cfg)
@@ -73,7 +96,14 @@ def main() -> None:
         for name, t in sorted(gsys.tenants().items()):
             print(f"tenant {name}: submitted={t.stats.submitted} "
                   f"reaped={t.stats.reaped} throttled={t.stats.throttled}")
+    if reporter is not None:
+        stop_stats.set()
+        reporter.join(timeout=2)
+        print(format_summary(gsys.telemetry()), flush=True)
     srv.close()
+    if args.trace_out:
+        gsys.export_chrome_trace(args.trace_out)
+        print(f"chrome trace written to {args.trace_out}", flush=True)
     gsys.shutdown()
 
 

@@ -30,6 +30,7 @@ fan out through the ring/tenant path as one multi-entry submission.
 """
 from __future__ import annotations
 
+import json
 import socket
 import time
 from dataclasses import dataclass
@@ -39,6 +40,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.genesys import Genesys, Sys
+from repro.core.genesys.trace import jsonable, summary_dict
+
+# STATS request op: a datagram ``GSTATS1\0 + uint32 reply_port (LE)``
+# is answered with the server's Genesys.telemetry() snapshot as JSON
+# (the full snapshot when it fits a datagram, else the compact summary)
+# instead of entering the request batch.
+STATS_MAGIC = b"GSTATS1\x00"
+_STATS_MAX_DGRAM = 60000      # stay under the UDP payload ceiling
 
 
 @dataclass
@@ -49,6 +58,7 @@ class ServeStats:
     wall_s: float = 0.0
     decode_dispatches: int = 0   # serve_fn invocations (jit dispatches)
     decode_buckets: int = 0      # batched-decode buckets run
+    stats_requests: int = 0      # STATS ops answered (telemetry snapshots)
 
 
 class GenesysUdpServer:
@@ -99,8 +109,11 @@ class GenesysUdpServer:
                 bh = self.gsys.heap.new_buffer(self.payload)
                 n = self._call(Sys.RECVFROM, self.fd, bh, self.payload)
                 if n > 0:
-                    out.append(np.asarray(
-                        self.gsys.heap.resolve(bh))[:n].copy())
+                    req = np.asarray(self.gsys.heap.resolve(bh))[:n].copy()
+                    if self._maybe_stats(req):
+                        self.gsys.heap.release(bh)
+                        continue      # control op, not a serving request
+                    out.append(req)
                     sock.settimeout(self.window)
                 self.gsys.heap.release(bh)
                 if n <= 0:
@@ -111,6 +124,25 @@ class GenesysUdpServer:
             except OSError:
                 pass   # socket closed during shutdown
         return out
+
+    def _maybe_stats(self, req: np.ndarray) -> bool:
+        """Handle a STATS control datagram: reply with the telemetry
+        snapshot as JSON to the embedded port. Returns True if ``req``
+        was a STATS op (and must not enter the request batch)."""
+        data = req.tobytes()
+        if not data.startswith(STATS_MAGIC):
+            return False
+        self.stats.stats_requests += 1
+        if len(data) >= len(STATS_MAGIC) + 4:
+            port = int.from_bytes(
+                data[len(STATS_MAGIC):len(STATS_MAGIC) + 4], "little")
+            if port:
+                snap = self.gsys.telemetry()
+                blob = json.dumps(jsonable(snap)).encode()
+                if len(blob) > _STATS_MAX_DGRAM:   # huge histogram set:
+                    blob = json.dumps(summary_dict(snap)).encode()
+                self.reply([blob], port)
+        return True
 
     def reply(self, payloads: list[bytes], port: int) -> None:
         if self.use_ring:

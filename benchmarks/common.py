@@ -30,6 +30,17 @@ def open_ro(g: Genesys, path: str) -> int:
     return fd
 
 
+def trimmed_mean(xs, trim: float = 0.25) -> float:
+    """Mean of the middle (1 - 2*trim) of ``xs``: robust to the tail
+    pairs a noisy neighbor lands on, lower-variance than the median
+    because it still averages half the samples. The shared estimator for
+    every paired-ratio gate (fig10 fused preads, fig11 trace overhead)."""
+    xs = sorted(xs)
+    k = int(len(xs) * trim)
+    mid = xs[k:len(xs) - k] or xs
+    return sum(mid) / len(mid)
+
+
 def timeit(fn, *, repeats: int = 3) -> float:
     best = float("inf")
     for _ in range(repeats):

@@ -50,7 +50,8 @@ if __package__ in (None, ""):           # `python benchmarks/fig11_telemetry.py`
 
 from repro.core.genesys import Genesys, Sys, SyscallRing     # noqa: E402
 from repro.core.genesys.trace import bucket_of               # noqa: E402
-from benchmarks.common import emit, make_file, make_gsys, open_ro  # noqa: E402
+from benchmarks.common import (emit, make_file, make_gsys, open_ro,  # noqa: E402
+                               trimmed_mean)
 
 FULL_BATCHES = (64, 256)
 QUICK_BATCHES = (64,)
@@ -79,16 +80,6 @@ def _ring_throughput(g: Genesys, calls, iters: int) -> None:
 def _median(xs):
     xs = sorted(xs)
     return xs[len(xs) // 2]
-
-
-def _trimmed_mean(xs, trim: float = 0.25) -> float:
-    """Mean of the middle (1 - 2*trim) of ``xs``: robust to the tail
-    pairs a noisy neighbor lands on, lower-variance than the median
-    because it still averages half the samples."""
-    xs = sorted(xs)
-    k = int(len(xs) * trim)
-    mid = xs[k:len(xs) - k] or xs
-    return sum(mid) / len(mid)
 
 
 def _p_bucket(samples_us, q: float) -> int:
@@ -167,7 +158,7 @@ def _measure_overhead(batches, repeats: int,
             # reps is robust to the occasional rep a noisy neighbor lands
             # on. (min(on)/min(off) is NOT robust here: the two minima
             # can come from different luck-windows, skewing either way.)
-            ratios[key] = _trimmed_mean(
+            ratios[key] = trimmed_mean(
                 [on / off for on, off in zip(ons, offs)])
             off, on = min(offs), min(ons)
             emit(f"fig11/{key}_untraced", off * 1e6, f"{1.0 / off:.0f}_calls_per_s")

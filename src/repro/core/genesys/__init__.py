@@ -75,6 +75,23 @@ fixed-capacity wraparound event ring — off by default, enabled with
 When the event ring wraps, old events are overwritten (histograms cover
 the most recent window; ``telemetry()["trace"]["dropped"]`` counts the
 loss) and the counters — which never drop — remain exact.
+
+Serving (``repro.serving``): the paper's echo server grown into a model
+server whose data plane is genesys syscalls end to end. Network I/O is
+RECVFROM/SENDTO on tenant rings; the KV cache is a **paged pool**
+(:class:`repro.serving.pagedkv.PagedKVPool`) of fixed-size blocks whose
+residency is modeled through :class:`MemoryPool` — MMAP at carve, touch
+on allocation, MADVISE(DONTNEED) on free — with a block table per
+request instead of one contiguous cache per slot. Sealed shared-prefix
+blocks are content-addressed (chained hashes), refcounted across
+concurrent requests, and LRU-evicted under pressure: eviction PWRITE64s
+the block's payload to a spill file and a later prefix hit revives it
+with **PREAD64_FIXED into the registered staging buffer, so the decode
+read path never pays a heap resolve**. On top sits the
+continuous-batching engine (``serving/engine.py``): one fixed decode
+shape jitted once, admissions and retirements mid-decode by mutating
+block-table rows only, and a split-KV flash-decode kernel
+(``kernels/decode_attention.py``) that walks the block table directly.
 """
 from repro.core.genesys.area import (
     SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,

@@ -1,10 +1,25 @@
 """Pallas flash-decode: one query token against a long KV cache.
 
-q [B, H, hd]; k,v [B, KV, S, hd]; lens [B] valid lengths. Grid (B, H, nk)
-with the KV-block dimension innermost (arbitrary semantics): online softmax
-accumulates in VMEM scratch, masked beyond lens[b]. KV blocks of 512 keep
-the per-step working set (2 * 512 * hd * 4B ~ 0.5MB at hd=128) well inside
-VMEM while amortizing HBM reads of the cache — the decode bottleneck.
+Two variants:
+
+  * :func:`decode_attention` — dense cache. q [B, H, hd]; k,v
+    [B, KV, S, hd]; lens [B] valid lengths. Grid (B, H, nk) with the
+    KV-block dimension innermost (arbitrary semantics): online softmax
+    accumulates in VMEM scratch, masked beyond lens[b].
+  * :func:`paged_decode_attention` — split-KV flash-decoding over a PAGED
+    cache (genesys.pagedkv): K/V live in a shared block arena
+    [NB, BS, KV, hd] and each sequence addresses its blocks through a
+    block table [B, MB] passed as a scalar-prefetch argument, so the
+    BlockSpec index maps gather pages without materializing a contiguous
+    cache. The grid adds a KV-split axis: each split reduces its pages
+    with online softmax into partial (o, m, l) outputs, and a cheap
+    cross-split log-sum-exp merge on the host side of the call combines
+    them — long contexts parallelize across splits instead of serializing
+    one row's whole cache behind a single grid step.
+
+KV blocks of 512 keep the dense per-step working set
+(2 * 512 * hd * 4B ~ 0.5MB at hd=128) well inside VMEM while amortizing
+HBM reads of the cache — the decode bottleneck.
 """
 from __future__ import annotations
 
@@ -17,6 +32,22 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_K = 512
+
+
+def default_interpret() -> bool:
+    """Pallas-compiled on TPU, interpreter elsewhere.
+
+    The interpreter is the correct default on CPU/GPU test hosts (TPU
+    lowering is unavailable), but it must never be silently picked on
+    real hardware — serving would run the kernels in pure-Python
+    emulation. Callers pass ``interpret=None`` to get this policy;
+    an explicit bool always wins.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m_i, l_i, *,
@@ -50,7 +81,8 @@ def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m_i, l_i, *,
 
 
 def decode_attention(q, k, v, lens, *, scale: float | None = None,
-                     block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool | None = None):
     """q [B,H,hd]; k,v [B,KV,S,hd]; lens [B] -> o [B,H,hd]."""
     B, H, hd = q.shape
     _, KV, S, _ = k.shape
@@ -76,5 +108,130 @@ def decode_attention(q, k, v, lens, *, scale: float | None = None,
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v, lens)
+
+
+# ------------------------------------------- paged split-KV flash-decode ----
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                  acc, m_i, l_i, *, block_size: int, pages_per_split: int,
+                  scale: float):
+    """One (seq, head, split, page) grid step: fold one arena block into the
+    split's online softmax. bt_ref is the scalar-prefetch block table — the
+    k/v BlockSpec index maps already used it to fetch THIS page, so the
+    kernel body only needs the page's logical position for masking."""
+    s_id = pl.program_id(2)
+    p = pl.program_id(3)
+
+    @pl.when(p == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)            # [bs, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    valid = len_ref[0]
+    s = (k @ q) * scale                               # [bs]
+    page = s_id * pages_per_split + p
+    pos = page * block_size + jax.lax.iota(jnp.int32, block_size)
+    s = jnp.where(pos < valid, s, NEG_INF)
+    m_new = jnp.maximum(m_i[0], s.max())
+    pr = jnp.exp(s - m_new)
+    corr = jnp.exp(m_i[0] - m_new)
+    l_i[0] = l_i[0] * corr + pr.sum()
+    acc[...] = acc[...] * corr + pr @ v
+    m_i[0] = m_new
+
+    @pl.when(p == pages_per_split - 1)
+    def _fin():
+        # partial per-split output; the caller's cross-split reduce
+        # renormalizes with (m, l), so an all-masked split (l == 0)
+        # contributes zero weight
+        o_ref[0, 0, 0] = (acc[...] / jnp.maximum(l_i[0], 1e-30)
+                          ).astype(o_ref.dtype)
+        m_ref[0, 0, 0] = m_i[0]
+        l_ref[0, 0, 0] = l_i[0]
+
+
+def _split_count(n_pages: int, want: int) -> int:
+    """Largest divisor of n_pages <= want: every split walks the same
+    number of pages (rectangular grid), no remainder split."""
+    want = max(1, min(int(want), n_pages))
+    for d in range(want, 0, -1):
+        if n_pages % d == 0:
+            return d
+    return 1
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lens, *,
+                           scale: float | None = None, n_splits: int = 4,
+                           interpret: bool | None = None):
+    """Split-KV flash-decode through block tables (flash-decoding over the
+    genesys.pagedkv arena).
+
+    q [B,H,hd]; k_pages/v_pages [NB,BS,KV,hd] shared arena; block_tables
+    [B,MB] int32 arena block ids (pad rows with the pool's null block —
+    they are masked by ``lens``); lens [B] valid token counts.
+    Returns o [B,H,hd].
+
+    Grid (B, H, n_splits, pages_per_split): axis 2 parallelizes one
+    sequence's context across independent partial reductions (each with
+    its own VMEM accumulator), axis 3 streams a split's pages through the
+    online softmax. The block table rides scalar prefetch so the K/V
+    BlockSpec index maps resolve ``bt[b, page]`` — the kernel reads arena
+    blocks directly, never a gathered contiguous cache. The partial
+    (o, m, l) triplets are merged with one log-sum-exp reduction.
+    """
+    B, H, hd = q.shape
+    NB, BS, KV, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    ns = _split_count(MB, n_splits)
+    pps = MB // ns
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, ns, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, s, p, bt: (b, h, 0)),
+            pl.BlockSpec((1, BS, 1, hd),
+                         lambda b, h, s, p, bt, G=G, pps=pps:
+                         (bt[b, s * pps + p], 0, h // G, 0)),
+            pl.BlockSpec((1, BS, 1, hd),
+                         lambda b, h, s, p, bt, G=G, pps=pps:
+                         (bt[b, s * pps + p], 0, h // G, 0)),
+            pl.BlockSpec((1,), lambda b, h, s, p, bt: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, s, p, bt: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, s, p, bt: (b, h, s)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, s, p, bt: (b, h, s)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hd,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        functools.partial(_paged_kernel, block_size=BS, pages_per_split=pps,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, ns, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, ns), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, ns), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(block_tables, q, k_pages, v_pages, lens)
+    # cross-split online-softmax merge: each split's partial is already
+    # normalized by its own l, so reweight by l * exp(m - max m)
+    mm = m.max(axis=-1, keepdims=True)
+    alpha = jnp.exp(m - mm) * l                       # [B,H,ns]
+    denom = alpha.sum(axis=-1)
+    out = (o.astype(jnp.float32) * alpha[..., None]).sum(axis=2)
+    return (out / jnp.maximum(denom, 1e-30)[..., None]).astype(q.dtype)

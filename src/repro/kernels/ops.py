@@ -47,9 +47,43 @@ def _fa_bwd(causal, block_q, block_k, interpret, res, do):
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
 
-def decode_attention(q, k, v, lens, *, block_k=512, interpret=True):
+def decode_attention(q, k, v, lens, *, block_k=512, interpret=None):
+    """``interpret=None`` auto-selects from the JAX backend (compiled on
+    TPU, interpreter elsewhere) — see decode_attention.default_interpret.
+    Pass an explicit bool to override."""
     return _da.decode_attention(q, k, v, lens, block_k=block_k,
                                 interpret=interpret)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lens, *,
+                           n_splits=4, interpret=None):
+    """Split-KV flash-decode through block tables (genesys.pagedkv).
+
+    q [B,H,hd]; k_pages/v_pages [NB,BS,KV,hd]; block_tables [B,MB] int32;
+    lens [B] -> [B,H,hd]. Long contexts parallelize over ``n_splits``
+    partial reductions merged by one cross-split log-sum-exp.
+    """
+    return _da.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                      lens, n_splits=n_splits,
+                                      interpret=interpret)
+
+
+def update_kv_buffer(k_pages, v_pages, k_new, v_new, slots):
+    """Paged KV-cache append (lite_llama's ``update_kv_buffer`` surface):
+    scatter one new token's K/V per sequence into flat arena slots.
+
+    k_pages/v_pages [NB,BS,KV,hd]; k_new/v_new [B,KV,hd]; slots [B] int32
+    flat slot index (block_id * BS + offset within the block). Multiple
+    rows may only alias a slot inside the pool's null block (inactive
+    batch rows), where any write order is acceptable; out-of-range slots
+    are dropped.
+    """
+    NB, BS, KV, hd = k_pages.shape
+    kf = k_pages.reshape(NB * BS, KV, hd)
+    vf = v_pages.reshape(NB * BS, KV, hd)
+    kf = kf.at[slots].set(k_new.astype(kf.dtype), mode="drop")
+    vf = vf.at[slots].set(v_new.astype(vf.dtype), mode="drop")
+    return kf.reshape(NB, BS, KV, hd), vf.reshape(NB, BS, KV, hd)
 
 
 def mamba2_ssd(x, dt, A, Bm, Cm, *, chunk=64, interpret=True):

@@ -37,6 +37,22 @@ def main() -> None:
     ap.add_argument("--batch-decode", action="store_true",
                     help="bucket concurrent requests: one jit dispatch per "
                          "token step per bucket (amortized decode)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the genesys.pagedkv "
+                         "paged KV pool: fixed-shape slot-masked decode, "
+                         "requests admitted/retired mid-decode")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots for --continuous")
+    ap.add_argument("--kv-blocks", type=int, default=256,
+                    help="paged KV arena blocks for --continuous")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="token positions per KV block for --continuous")
+    ap.add_argument("--spill", default=None, metavar="PATH",
+                    help="spill file for evicted prefix blocks "
+                         "(PWRITE64 out, PREAD64_FIXED back)")
+    ap.add_argument("--per-request-tokens", action="store_true",
+                    help="wire format [budget, tag, prompt...]: each "
+                         "request carries its own token budget")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable genesys.trace lifecycle telemetry and "
                          "write a Chrome-trace/Perfetto JSON here on exit")
@@ -79,19 +95,35 @@ def main() -> None:
     rules = rules_for(cfg, mesh)
     api = get_api(cfg)
     params, _ = api.init(jax.random.PRNGKey(0), cfg)
-    cache = api.init_cache(cfg, 1, 256)
-    serve = jax.jit(make_serve_step(cfg, rules))
     srv = GenesysUdpServer(gsys, port=args.port, use_ring=args.use_ring,
                            use_tenants=args.tenants)
     with mesh:
-        stats = srv.serve_model(serve, params, cache,
-                                n_batches=args.batches,
-                                reply_port=args.reply_port,
-                                max_tokens=args.max_tokens,
-                                batch_decode=args.batch_decode)
+        if args.continuous:
+            from repro.serving.engine import make_engine
+            engine = make_engine(
+                cfg, rules, params, n_slots=args.slots,
+                n_blocks=args.kv_blocks, block_size=args.block_size,
+                gsys=gsys, spill_path=args.spill)
+            stats = srv.serve_model_continuous(
+                engine, reply_port=args.reply_port,
+                max_tokens=args.max_tokens,
+                per_request_tokens=args.per_request_tokens)
+            print(f"engine: occupancy={engine.stats.occupancy():.2f} "
+                  f"prefill_saved={engine.stats.prefill_steps_saved} "
+                  f"kv_hit_rate={engine.pool.stats.hit_rate():.2f} "
+                  f"kv_rss={engine.pool.rss_bytes()}")
+        else:
+            cache = api.init_cache(cfg, 1, 256)
+            serve = jax.jit(make_serve_step(cfg, rules))
+            stats = srv.serve_model(
+                serve, params, cache, n_batches=args.batches,
+                reply_port=args.reply_port, max_tokens=args.max_tokens,
+                batch_decode=args.batch_decode,
+                per_request_tokens=args.per_request_tokens)
     print(f"requests={stats.requests} batches={stats.batches} "
           f"tokens={stats.tokens_out} wall={stats.wall_s:.2f}s "
-          f"decode_dispatches={stats.decode_dispatches}")
+          f"decode_dispatches={stats.decode_dispatches} "
+          f"decode_steps={stats.decode_steps}")
     if args.tenants:
         for name, t in sorted(gsys.tenants().items()):
             print(f"tenant {name}: submitted={t.stats.submitted} "

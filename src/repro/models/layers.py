@@ -9,6 +9,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.sharding import constrain
 
 
@@ -138,6 +139,11 @@ def decode_attention_two_part(q, k_cache, v_cache, k_new, v_new, cache_len,
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+# static symmetric int8 KV quantization scale; production carries
+# per-block scales (+<1% bytes) — see DESIGN.md
+QSCALE = 16.0
+
+
 def decode_attention_xla(q, k_cache, v_cache, cache_len, *, scale=None):
     """Single-token decode: q [B,1,H,hd]; caches [B,S,KV,hd]; cache_len [B]."""
     B, _, H, hd = q.shape
@@ -154,6 +160,28 @@ def decode_attention_xla(q, k_cache, v_cache, cache_len, *, scale=None):
     o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def paged_attention_xla(q, k_pages, v_pages, block_tables, lens, *,
+                        scale=None):
+    """Single-token decode against the genesys.pagedkv block arena — the
+    XLA reference the Pallas split-KV kernel must match. q [B,1,H,hd];
+    k_pages/v_pages [NB,BS,KV,hd]; block_tables [B,MB] int32 (pad with the
+    pool's null block; padded positions are masked by ``lens``); lens [B].
+
+    Gathers each sequence's pages into a [B, MB*BS, KV, hd] view and runs
+    the masked decode softmax — the logical computation the kernel
+    performs in place through the block table.
+    """
+    B, _, H, hd = q.shape
+    NB, BS, KV, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    kd = k_pages[block_tables].reshape(B, MB * BS, KV, hd)
+    vd = v_pages[block_tables].reshape(B, MB * BS, KV, hd)
+    if k_pages.dtype == jnp.int8:
+        kd = kd.astype(q.dtype) / QSCALE
+        vd = vd.astype(q.dtype) / QSCALE
+    return decode_attention_xla(q, kd, vd, lens, scale=scale)
 
 
 # ------------------------------------------------------------ attention -----
@@ -173,10 +201,13 @@ def init_attention(pb, cfg, *, rope_scaled: bool = True, prefix: str = "attn"):
 
 def attention(p, cfg, rules, x, *, positions, causal=True, kv_x=None,
               cache=None, cache_len=None, use_rope=True,
-              carried_cache=None):
+              carried_cache=None, paged_cache=None):
     """GQA attention. cache: dict(k,v) [B,S,KV,hd] for decode; kv_x for
     cross-attention (enc-dec); carried_cache: (kc, vc, layer_idx) stacked
-    [L,B,S,KV,hd] buffers updated in place. Returns (out, new_cache)."""
+    [L,B,S,KV,hd] buffers updated in place; paged_cache:
+    (k_pages, v_pages, block_tables, layer_idx) stacked [L,NB,BS,KV,hd]
+    genesys.pagedkv arenas addressed per row through block_tables [B,MB]
+    with a per-row cache_len. Returns (out, new_cache)."""
     dt = x.dtype
     kv_src = x if kv_x is None else kv_x
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
@@ -203,7 +234,35 @@ def attention(p, cfg, rules, x, *, positions, causal=True, kv_x=None,
             k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if carried_cache is not None and kv_x is None:
+    if paged_cache is not None and kv_x is None:
+        # decode against the genesys.pagedkv block arena [L,NB,BS,KV,hd]:
+        # WRITE the new token's K/V at its block-table slot (the
+        # update_kv_buffer scatter at block_tables[b, cl//BS]*BS + cl%BS),
+        # then attend through the block table with per-row lens =
+        # cache_len + 1. Inactive batch rows carry all-null block tables
+        # and cache_len 0, so their writes land in the pool's null block
+        # and their outputs are garbage nobody reads (slot-masked
+        # continuous batching, serving/engine.py).
+        kp, vp, bt, li = paged_cache
+        BS = kp.shape[2]
+        quant = kp.dtype == jnp.int8
+        kp_l = jax.lax.dynamic_index_in_dim(kp, li, axis=0, keepdims=False)
+        vp_l = jax.lax.dynamic_index_in_dim(vp, li, axis=0, keepdims=False)
+        if quant:
+            k_w = jnp.clip(jnp.round(k * QSCALE), -127, 127).astype(jnp.int8)
+            v_w = jnp.clip(jnp.round(v * QSCALE), -127, 127).astype(jnp.int8)
+        else:
+            k_w = k.astype(kp.dtype)
+            v_w = v.astype(vp.dtype)
+        B = x.shape[0]
+        slot = (bt[jnp.arange(B), cache_len // BS] * BS + cache_len % BS)
+        kp_l, vp_l = kernel_ops.update_kv_buffer(kp_l, vp_l, k_w[:, 0],
+                                                 v_w[:, 0], slot)
+        out = paged_attention_xla(q, kp_l, vp_l, bt, cache_len + 1)
+        kp = jax.lax.dynamic_update_slice_in_dim(kp, kp_l[None], li, axis=0)
+        vp = jax.lax.dynamic_update_slice_in_dim(vp, vp_l[None], li, axis=0)
+        new_cache = (kp, vp)
+    elif carried_cache is not None and kv_x is None:
         # decode against a CARRIED stacked cache [L,B,S,KV,hd] (§Perf
         # "in-place carried KV cache"): READ the old layer slice, attend
         # the new token separately (two-part softmax), then WRITE only the
@@ -211,10 +270,7 @@ def attention(p, cfg, rules, x, *, positions, causal=True, kv_x=None,
         # orders read-before-write and can alias the buffer in place.
         kc, vc, li = carried_cache
         zero = jnp.zeros((), jnp.int32)
-        pos = cache_len[0]
         quant = kc.dtype == jnp.int8
-        QSCALE = 16.0   # static symmetric scale; production carries
-        #               # per-block scales (+<1% bytes) — see DESIGN.md
         k_l = jax.lax.dynamic_slice(
             kc, (li, zero, zero, zero, zero), (1,) + kc.shape[1:])[0]
         v_l = jax.lax.dynamic_slice(
@@ -234,10 +290,13 @@ def attention(p, cfg, rules, x, *, positions, causal=True, kv_x=None,
         else:
             k_w = (k + tie).astype(kc.dtype)
             v_w = (v + tie).astype(vc.dtype)
-        kc = jax.lax.dynamic_update_slice(
-            kc, k_w[None], (li, zero, pos, zero, zero))
-        vc = jax.lax.dynamic_update_slice(
-            vc, v_w[None], (li, zero, pos, zero, zero))
+        # per-row scatter at each row's own cache_len (rows at different
+        # depths — continuous batching — write to different positions;
+        # uniform rows degenerate to the old single-slice update, and
+        # rows past capacity drop instead of clamp-overwriting)
+        rows = jnp.arange(kc.shape[1])
+        kc = kc.at[li, rows, cache_len].set(k_w[:, 0], mode="drop")
+        vc = vc.at[li, rows, cache_len].set(v_w[:, 0], mode="drop")
         new_cache = (kc, vc)
     elif cache is not None and kv_x is None:
         # decode: append to cache at cache_len (per-layer slice variant)

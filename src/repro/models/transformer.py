@@ -38,11 +38,11 @@ def init(rng, cfg: ModelConfig):
 
 
 def _block(cfg, rules, p, x, *, positions, cache=None, cache_len=None,
-           carried_cache=None):
+           carried_cache=None, paged_cache=None):
     h, new_cache = L.attention(
         p["attn"], cfg, rules, L.rmsnorm(x, p["ln_attn"]),
         positions=positions, cache=cache, cache_len=cache_len,
-        carried_cache=carried_cache)
+        carried_cache=carried_cache, paged_cache=paged_cache)
     x = x + h
     if cfg.family == Family.MOE:
         x = x + MOE.moe_mlp(p, cfg, rules, L.rmsnorm(x, p["ln_mlp"]))
@@ -61,9 +61,12 @@ def _remat(fn, cfg):
 
 
 def forward(params, cfg: ModelConfig, rules, tokens, *, embeds=None,
-            positions=None, cache=None, cache_len=None):
+            positions=None, cache=None, cache_len=None, paged_cache=None):
     """tokens: [B,S] int32. embeds: [B,P,D] precomputed prefix (VLM stub).
-    cache: stacked {k,v: [L,B,S,KV,hd]} for decode. Returns (logits, cache').
+    cache: stacked {k,v: [L,B,S,KV,hd]} for decode. paged_cache:
+    (k_pages, v_pages, block_tables) with arenas [L,NB,BS,KV,hd] shared by
+    all sequences and per-row block tables [B,MB] + cache_len [B]
+    (genesys.pagedkv continuous batching). Returns (logits, cache').
     """
     dt = jnp.dtype(cfg.compute_dtype)
     x = params["embed"].astype(dt)[tokens]
@@ -78,9 +81,24 @@ def forward(params, cfg: ModelConfig, rules, tokens, *, embeds=None,
                                          (B, S))
     x = constrain(x, rules, "batch", "seq", "embed")
 
-    decode = cache is not None
+    if paged_cache is not None:
+        # paged decode: every layer reads/writes its slice of the shared
+        # block arenas through the SAME per-sequence block table (a block
+        # id is valid at every layer — one table per sequence, not per
+        # layer), carried through the scan like the dense stacked cache
+        kp0, vp0, bt = paged_cache
 
-    if decode:
+        def body(carry, z):
+            h, kp, vp = carry
+            h, (kp, vp) = _block(cfg, rules, z["p"], h, positions=positions,
+                                 paged_cache=(kp, vp, bt, z["i"]),
+                                 cache_len=cache_len)
+            return (h, kp, vp), None
+        xs = {"p": params["blocks"],
+              "i": jnp.arange(cfg.n_layers, dtype=jnp.int32)}
+        (x, kp, vp), _ = jax.lax.scan(body, (x, kp0, vp0), xs)
+        new_cache = {"k": kp, "v": vp}
+    elif cache is not None:
         # carried stacked cache: in-place single-token updates (§Perf)
         def body(carry, z):
             h, kc, vc = carry
@@ -111,6 +129,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
                kv_rep: int = 1):
     dtype = dtype or jnp.dtype(cfg.kv_cache_dtype)
     shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads * kv_rep, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_arena(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=None, kv_rep: int = 1):
+    """Block arenas for paged decode: {k,v: [L, NB, BS, KV, hd]}. One
+    arena serves every concurrent sequence; block 0 is the pool's null
+    block (padding target for inactive rows / short tables)."""
+    dtype = dtype or jnp.dtype(cfg.kv_cache_dtype)
+    shape = (cfg.n_layers, n_blocks, block_size,
+             cfg.n_kv_heads * kv_rep, cfg.hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

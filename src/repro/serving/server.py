@@ -56,7 +56,14 @@ class ServeStats:
     batches: int = 0
     tokens_out: int = 0
     wall_s: float = 0.0
-    decode_dispatches: int = 0   # serve_fn invocations (jit dispatches)
+    # decode accounting, consistent across ALL decode paths (fig12's
+    # dispatch-amortization ratio is decode_steps / decode_dispatches):
+    #   decode_dispatches — actual serve_fn invocations (jit dispatches)
+    #   decode_steps      — per-request token steps those dispatches
+    #                       covered (eager: == dispatches; batched/
+    #                       continuous: n_active per dispatch)
+    decode_dispatches: int = 0
+    decode_steps: int = 0
     decode_buckets: int = 0      # batched-decode buckets run
     stats_requests: int = 0      # STATS ops answered (telemetry snapshots)
 
@@ -96,14 +103,19 @@ class GenesysUdpServer:
         self.stats = ServeStats()
         self._pending_handles: list[int] = []
 
-    def poll_requests(self) -> list[np.ndarray]:
+    def poll_requests(self, idle_wait: float | None = None
+                      ) -> list[np.ndarray]:
         """Gather up to max_batch datagrams within the batching window
         (blocking weak-ordered recvfrom syscalls). The first receive waits
         the idle timeout; follow-ups only wait the short batching window so
-        a lone request is answered immediately."""
+        a lone request is answered immediately. ``idle_wait`` overrides the
+        first-receive wait — the continuous engine polls with a tiny wait
+        while slots are decoding so admission never stalls the batch."""
         out = []
         sock = self.gsys.table._sockets[self.fd]
         idle_timeout = sock.gettimeout()
+        if idle_wait is not None:
+            sock.settimeout(idle_wait)
         try:
             while len(out) < self.max_batch:
                 bh = self.gsys.heap.new_buffer(self.payload)
@@ -200,7 +212,8 @@ class GenesysUdpServer:
                     reply_port: int, max_tokens: int = 8,
                     n_requests: int | None = None,
                     max_idle_polls: int = 50,
-                    batch_decode: bool = False) -> ServeStats:
+                    batch_decode: bool = False,
+                    per_request_tokens: bool = False) -> ServeStats:
         """Decode-loop mode: each request's payload is int32 prompt tokens;
         respond with greedily decoded continuations. Stops at whichever
         bound hits first: ``n_batches`` non-empty batches, ``n_requests``
@@ -215,7 +228,13 @@ class GenesysUdpServer:
         one per request; the bucket's replies then fan out through the
         existing ring/tenant send path as one multi-entry submission.
         Default ``False`` keeps the eager per-request replies (minimum
-        per-request latency; one jit dispatch per request per token)."""
+        per-request latency; one jit dispatch per request per token).
+
+        ``per_request_tokens=True`` switches the wire format to
+        ``[budget, tag, prompt...]`` int32 (replies echo ``[tag,
+        gens...]``): each request decodes its OWN token budget, capped at
+        ``max_tokens`` steps per bucket member — the mixed-length workload
+        the continuous engine is benchmarked against."""
         t0 = time.monotonic()
         done = 0
         idle = 0
@@ -229,30 +248,97 @@ class GenesysUdpServer:
                     break               # traffic died before the target
                 continue
             idle = 0
-            toks = [np.frombuffer(r.tobytes(), dtype=np.int32) for r in reqs]
+            parsed = [parse_request(r, per_request_tokens, max_tokens)
+                      for r in reqs]
+            toks = [p[0] for p in parsed]
+            budgets = [p[1] for p in parsed]
+            tags = [p[2] for p in parsed]
             if batch_decode:
                 gens = _greedy_decode_batch(serve_fn, params, cache, toks,
-                                            max_tokens, self.stats)
+                                            max_tokens, self.stats,
+                                            budgets=(budgets if
+                                                     per_request_tokens
+                                                     else None))
                 # the bucket's replies fan out through the tenant/ring
                 # send path as ONE multi-entry submission
-                self.reply([np.asarray(gn, dtype=np.int32).tobytes()
-                            for gn in gens], reply_port)
+                self.reply([encode_reply(gn, tag)
+                            for gn, tag in zip(gens, tags)], reply_port)
                 self.stats.tokens_out += sum(len(gn) for gn in gens)
             else:
-                for t in toks:
+                for t, n_i, tag in zip(toks, budgets, tags):
                     gen = _greedy_decode(serve_fn, params, cache, cache_len,
-                                         t, max_tokens)
+                                         t, n_i)
                     # reply eagerly, per request: earlier requests in a
                     # batch are not held hostage by later ones' decode
                     # steps (the ring/tenant send is async, so this costs
                     # one SQE each)
-                    self.reply([np.asarray(gen, dtype=np.int32).tobytes()],
-                               reply_port)
+                    self.reply([encode_reply(gen, tag)], reply_port)
                     self.stats.tokens_out += len(gen)
-                    self.stats.decode_dispatches += max_tokens
+                    self.stats.decode_dispatches += n_i
+                    self.stats.decode_steps += n_i
             self.stats.requests += len(reqs)
             self.stats.batches += 1
             done += 1
+        self.gsys.drain()
+        self._release_pending()
+        self.stats.wall_s = time.monotonic() - t0
+        return self.stats
+
+    def serve_model_continuous(self, engine, *, reply_port: int,
+                               n_requests: int | None = None,
+                               max_tokens: int = 8,
+                               max_idle_polls: int = 50,
+                               per_request_tokens: bool = True
+                               ) -> ServeStats:
+        """Continuous-batching decode loop: the engine decodes every step
+        at ONE fixed batch shape while this loop admits arrivals and
+        retires/answers finishers between steps — a request that lands
+        mid-decode joins the NEXT step instead of waiting for the current
+        bucket to drain (serving/engine.py).
+
+        While slots are busy, polls wait ~0 so admission never stalls the
+        batch — and are SKIPPED outright when admission is impossible
+        this step (no free slot, or the queue already covers the free
+        ones): arrivals sit in the kernel socket buffer and are swept up
+        right after the next retirement, so a saturated engine pays zero
+        poll latency per decode step. When the engine idles, polls block
+        the socket's idle timeout. Stops once ``n_requests`` requests
+        are answered (or after ``max_idle_polls`` idle polls with
+        nothing in flight).
+        """
+        t0 = time.monotonic()
+        engine.serve_stats = self.stats
+        queue: list[tuple[np.ndarray, int, int | None]] = []
+        idle = 0
+        replied = 0
+        while True:
+            busy = engine.n_active > 0 or bool(queue)
+            if n_requests is not None and replied >= n_requests:
+                break
+            if busy and len(queue) >= engine.free_slots:
+                reqs = []           # nothing to admit into: don't block
+            else:
+                reqs = self.poll_requests(idle_wait=0.001 if busy else None)
+            if reqs:
+                idle = 0
+                self.stats.requests += len(reqs)
+                self.stats.batches += 1
+                queue.extend(parse_request(r, per_request_tokens, max_tokens)
+                             for r in reqs)
+            elif not busy:
+                idle += 1
+                if n_requests is None or idle >= max_idle_polls:
+                    break               # traffic died before the target
+                continue
+            # admit as many queued requests as slots/blocks allow — the
+            # rest stay queued and retry after the next retirements
+            while queue and engine.admit(queue[0][0], queue[0][1],
+                                         meta=queue[0][2]):
+                queue.pop(0)
+            for tag, gen in engine.step():
+                self.reply([encode_reply(gen, tag)], reply_port)
+                self.stats.tokens_out += len(gen)
+                replied += 1
         self.gsys.drain()
         self._release_pending()
         self.stats.wall_s = time.monotonic() - t0
@@ -265,6 +351,29 @@ class GenesysUdpServer:
 def cache_batch_size(cache) -> int:
     leaves = jax.tree_util.tree_leaves(cache)
     return leaves[0].shape[1]
+
+
+def parse_request(req: np.ndarray, per_request_tokens: bool,
+                  default_tokens: int
+                  ) -> tuple[np.ndarray, int, int | None]:
+    """Decode one datagram into ``(prompt_tokens, budget, tag)``.
+
+    Plain format: the whole payload is int32 prompt tokens; the budget is
+    the server-wide ``max_tokens`` and replies carry no tag. Per-request
+    format (``per_request_tokens=True``): ``[budget, tag, prompt...]`` —
+    the tag is echoed first in the reply so an open-loop client can match
+    out-of-order completions to its requests."""
+    toks = np.frombuffer(req.tobytes(), dtype=np.int32)
+    if not per_request_tokens:
+        return toks, default_tokens, None
+    budget = max(1, int(toks[0])) if len(toks) else 1
+    tag = int(toks[1]) if len(toks) > 1 else 0
+    return toks[2:], budget, tag
+
+
+def encode_reply(gen, tag: int | None) -> bytes:
+    toks = ([] if tag is None else [tag]) + list(gen)
+    return np.asarray(toks, dtype=np.int32).tobytes()
 
 
 def _greedy_decode(serve_fn, params, cache, cache_len, prompt_toks,
@@ -301,7 +410,9 @@ def _tile_cache(cache, kb: int):
 
 
 def _greedy_decode_batch(serve_fn, params, cache, prompts, max_tokens: int,
-                         stats: ServeStats | None = None) -> list[list[int]]:
+                         stats: ServeStats | None = None,
+                         budgets: list[int] | None = None
+                         ) -> list[list[int]]:
     """Greedy continuations for a whole request batch: one ``serve_fn``
     dispatch per token step per power-of-two bucket, instead of one per
     request — the jit-dispatch amortization the ROADMAP called for.
@@ -309,6 +420,11 @@ def _greedy_decode_batch(serve_fn, params, cache, prompts, max_tokens: int,
     Semantically identical to mapping :func:`_greedy_decode` over
     ``prompts``: each request decodes from a fresh initial cache; padded
     bucket rows (zero tokens) decode garbage nobody reads.
+
+    ``budgets`` gives per-request token counts: the bucket is CLOSED —
+    it runs until its longest member finishes (capped at ``max_tokens``)
+    and early finishers ride along as dead rows. That occupancy waste is
+    exactly what the continuous engine eliminates (fig12).
     """
     gens: list[list[int]] = []
     # cap the bucket so an oversized poll batch splits instead of padding
@@ -316,6 +432,9 @@ def _greedy_decode_batch(serve_fn, params, cache, prompts, max_tokens: int,
     bucket = max(1, min(_bucket_size(len(prompts)), MAX_DECODE_BUCKET))
     for lo in range(0, len(prompts), bucket):
         chunk = prompts[lo:lo + bucket]
+        want = ([max_tokens] * len(chunk) if budgets is None
+                else [min(max(1, b), max_tokens)
+                      for b in budgets[lo:lo + bucket]])
         k = len(chunk)
         kb = _bucket_size(k)
         c = _tile_cache(cache, kb)
@@ -325,16 +444,19 @@ def _greedy_decode_batch(serve_fn, params, cache, prompts, max_tokens: int,
             cur_np[i, 0] = t[-1]
         cur = jnp.asarray(cur_np)
         chunk_gens: list[list[int]] = [[] for _ in range(k)]
-        for _ in range(max_tokens):
+        steps = max(want)
+        for _ in range(steps):
             nxt, c = serve_fn(params, c, cur, cl)
             step = np.asarray(nxt).reshape(-1)[:k].tolist()
             for i, v in enumerate(step):
-                chunk_gens[i].append(v)
+                if len(chunk_gens[i]) < want[i]:
+                    chunk_gens[i].append(v)
             cur = jnp.reshape(nxt, (kb, 1))
             cl = cl + 1
         gens.extend(chunk_gens)
         if stats is not None:
-            stats.decode_dispatches += max_tokens
+            stats.decode_dispatches += steps
+            stats.decode_steps += sum(want)
             stats.decode_buckets += 1
     return gens
 

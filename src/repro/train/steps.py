@@ -106,3 +106,29 @@ def make_serve_step(cfg: ModelConfig, rules):
         return next_tok, new_cache
 
     return serve_step
+
+
+def make_paged_serve_step(cfg: ModelConfig, rules):
+    """One paged decode step over the genesys.pagedkv arena:
+    (params, arenas {k,v: [L,NB,BS,KV,hd]}, block_tables [B,MB],
+    token [B,1], cache_len [B]) -> (next_token [B], new_arenas).
+
+    The batch shape is the engine's FIXED slot count — admitting or
+    retiring a request changes only block_tables/cache_len row contents,
+    never an array shape, so membership churn cannot trigger a re-jit.
+    """
+    api = get_api(cfg)
+    if cfg.family not in (Family.DENSE, Family.MOE, Family.VLM):
+        raise ValueError(
+            f"paged decode supports transformer-family archs, not "
+            f"{cfg.family} (SSM/hybrid state is not block-addressable)")
+
+    def paged_serve_step(params, arenas, block_tables, token, cache_len):
+        logits, new_arenas = api.forward(
+            params, cfg, rules, token,
+            paged_cache=(arenas["k"], arenas["v"], block_tables),
+            cache_len=cache_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_arenas
+
+    return paged_serve_step

@@ -106,6 +106,95 @@ def test_moe_gmm(T, D, F, E, tile):
                                atol=2e-4)
 
 
+# ------------------------------------------- paged split-KV flash-decode ----
+
+def _pack_pages(k, v, block_size, n_blocks, rng):
+    """Scatter a dense [B,KV,S,hd] cache into a shuffled paged arena with
+    block tables (block 0 stays reserved as the pool's null block)."""
+    B, KV, S, hd = k.shape
+    MB = S // block_size
+    bt = rng.permutation(np.arange(1, n_blocks))[:B * MB]
+    bt = bt.reshape(B, MB).astype(np.int32)
+    kp = np.zeros((n_blocks, block_size, KV, hd), np.float32)
+    vp = np.zeros_like(kp)
+    for b in range(B):
+        for p in range(MB):
+            lo = p * block_size
+            kp[bt[b, p]] = np.moveaxis(
+                np.asarray(k)[b, :, lo:lo + block_size], 0, 1)
+            vp[bt[b, p]] = np.moveaxis(
+                np.asarray(v)[b, :, lo:lo + block_size], 0, 1)
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,bs,ns", [
+    (2, 4, 2, 64, 32, 8, 4),      # GQA, splits divide the pages evenly
+    (1, 8, 8, 48, 16, 4, 3),      # MHA, 12 pages over 3 splits
+    (3, 2, 1, 32, 32, 16, 4),     # MQA, want 4 splits of 2 pages -> 2
+    (2, 4, 2, 64, 32, 8, 1),      # single split (plain paged decode)
+])
+def test_paged_decode_matches_dense(B, H, KV, S, hd, bs, ns):
+    """Split-KV flash-decode through a shuffled block table == the dense
+    decode oracle, under ragged lens (masked tail blocks)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+    rng = np.random.default_rng(11)
+    kp, vp, bt = _pack_pages(k, v, bs, B * (S // bs) + 3, rng)
+    o = ops.paged_decode_attention(q, kp, vp, bt, lens, n_splits=ns)
+    o_ref = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=3e-5)
+
+
+def test_paged_decode_garbage_beyond_lens_is_masked():
+    """Tokens past lens[b] — including whole trailing pages pointing at
+    arbitrary (even shared) blocks — must not leak into the output."""
+    B, H, KV, S, hd, bs = 2, 2, 2, 32, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    lens = jnp.asarray([9, 16])
+    rng = np.random.default_rng(3)
+    kp, vp, bt = _pack_pages(k, v, bs, B * (S // bs) + 2, rng)
+    o1 = ops.paged_decode_attention(q, kp, vp, bt, lens, n_splits=2)
+    # trash the arena blocks past each row's valid length: same output
+    bt_np = np.asarray(bt).copy()
+    dead = [bt_np[b, p] for b in range(B)
+            for p in range(-(-int(lens[b]) // bs), S // bs)]
+    kp2 = kp.at[jnp.asarray(dead)].set(999.0)
+    vp2 = vp.at[jnp.asarray(dead)].set(-999.0)
+    o2 = ops.paged_decode_attention(q, kp2, vp2, bt, lens, n_splits=2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+def test_update_kv_buffer_scatters_and_drops():
+    """Paged append: each row's (k,v) lands at its flat slot
+    (block * BS + offset); out-of-range slots (the null-block parking of
+    inactive batch rows) drop instead of wrapping."""
+    NB, BS, KV, hd, B = 5, 4, 2, 8, 3
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    kp0 = jax.random.normal(ks[0], (NB, BS, KV, hd))
+    vp0 = jax.random.normal(ks[1], (NB, BS, KV, hd))
+    k_new = jax.random.normal(ks[2], (B, KV, hd))
+    v_new = jax.random.normal(ks[3], (B, KV, hd))
+    slots = jnp.asarray([6, 13, NB * BS + 1])        # last is out of range
+    kp, vp = ops.update_kv_buffer(kp0, vp0, k_new, v_new, slots)
+    kf, vf = (np.asarray(kp).reshape(NB * BS, KV, hd),
+              np.asarray(vp).reshape(NB * BS, KV, hd))
+    np.testing.assert_allclose(kf[6], np.asarray(k_new)[0])
+    np.testing.assert_allclose(vf[13], np.asarray(v_new)[1])
+    untouched = [i for i in range(NB * BS) if i not in (6, 13)]
+    np.testing.assert_allclose(
+        kf[untouched],
+        np.asarray(kp0).reshape(NB * BS, KV, hd)[untouched])
+    np.testing.assert_allclose(
+        vf[untouched],
+        np.asarray(vp0).reshape(NB * BS, KV, hd)[untouched])
+
+
 def test_moe_gmm_skewed_experts():
     """All tokens on one expert — ragged extreme."""
     T, D, F, E = 256, 64, 64, 8

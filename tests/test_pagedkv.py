@@ -1,0 +1,278 @@
+"""genesys.pagedkv: paged KV pool semantics, the genesys memory binding
+(mmap/touch/DONTNEED residency, PWRITE64 spill + PREAD64_FIXED revival),
+and continuous-batching engine equivalence against a dense teacher-forced
+reference.
+
+Equivalence tests run in float32: the paged path computes softmax in one
+pass while the dense carried-cache path uses the two-part kernel — they
+are mathematically equal, but in bf16 last-ulp differences flip argmax on
+the near-tied logits of a random tiny model.
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.pagedkv import (NULL_BLOCK, PagedKVPool, PoolExhausted,
+                                   chain_hashes)
+
+BS = 4
+
+
+def _pool(n_blocks=8):
+    return PagedKVPool(n_blocks, BS)
+
+
+# ------------------------------------------------------- pool semantics -----
+
+def test_alloc_free_refcount_and_null_block():
+    p = _pool(6)                       # null + 5 usable
+    a = p.alloc(3)
+    assert len(a) == 3 and NULL_BLOCK not in a
+    assert p.stats.blocks_in_use == 3
+    b = p.alloc(2)
+    assert not set(a) & set(b)
+    with pytest.raises(PoolExhausted):
+        p.alloc(1)
+    assert p.stats.blocks_in_use == 5  # failed alloc takes nothing
+    p.retire(a)
+    assert p.free_blocks() == 3
+    assert p.stats.frees == 3 and p.stats.blocks_in_use == 2
+    # null-block entries in a table row are skipped on retirement
+    p.retire([NULL_BLOCK, NULL_BLOCK])
+    assert p.stats.blocks_in_use == 2
+
+
+def test_alloc_is_all_or_nothing():
+    p = _pool(4)
+    p.alloc(2)
+    with pytest.raises(PoolExhausted):
+        p.alloc(3)
+    assert len(p.alloc(1)) == 1        # the partial claim was rolled back
+
+
+def test_chain_hashes_depend_on_depth():
+    """The same token window at different prefix depths must not alias."""
+    toks = list(range(3 * BS))
+    h = chain_hashes(toks, BS)
+    assert len(h) == 3 and len(set(h)) == 3
+    # identical second block content, different first block -> different h[1]
+    other = [99] * BS + toks[BS:2 * BS]
+    assert chain_hashes(other, BS)[1] != h[1]
+    # partial trailing block contributes no hash
+    assert len(chain_hashes(toks[:2 * BS + 1], BS)) == 2
+
+
+def test_prefix_seal_share_and_lru_eviction():
+    p = _pool(8)
+    prompt = list(range(2 * BS))
+    blocks = p.alloc(2)
+    p.retire(blocks, prompt_tokens=prompt)
+    assert p.stats.sealed == 2
+    assert p.free_blocks() == 7        # cached blocks stay reclaimable
+    # two sharers hold the prefix concurrently: refcount, not copies
+    ids1, f1 = p.acquire_prefix(prompt)
+    ids2, f2 = p.acquire_prefix(prompt)
+    assert ids1 == blocks and ids2 == blocks and f1 == [] and f2 == []
+    assert p.stats.prefix_hits == 4 and p.stats.hit_rate() == 1.0
+    p.retire(ids1)
+    p.retire(ids2, prompt_tokens=prompt)   # re-seal is a no-op, re-parks
+    assert p.stats.blocks_in_use == 0
+    # an oversized alloc reclaims the cached blocks LRU-first
+    got = p.alloc(7)
+    assert p.stats.evictions == 2
+    assert set(blocks) <= set(got)
+    # the sealed mapping died with the eviction (no spill file bound)
+    ids3, _ = p.acquire_prefix(prompt)
+    assert ids3 == []
+
+
+def test_acquire_prefix_stops_at_first_miss():
+    p = _pool(8)
+    blocks = p.alloc(3)
+    prompt = list(range(3 * BS))
+    p.retire(blocks, prompt_tokens=prompt)
+    # a prompt sharing only the first two blocks reuses exactly those
+    other = prompt[:2 * BS] + [777] * BS
+    ids, _ = p.acquire_prefix(other)
+    assert ids == blocks[:2]
+    p.retire(ids)
+
+
+# ------------------------------------------------- genesys memory binding ---
+
+@pytest.fixture()
+def gsys():
+    from repro.core.genesys import Genesys, GenesysConfig
+    g = Genesys(GenesysConfig(n_workers=2))
+    yield g
+    g.shutdown()
+
+
+def test_bound_pool_tracks_rss(gsys):
+    p = _pool(6)
+    p.bind_genesys(gsys, block_bytes=8192)
+    assert p.rss_bytes() == 0
+    a = p.alloc(3)                     # touch -> resident
+    assert p.rss_bytes() >= 3 * 8192
+    p.retire(a)                        # MADV_DONTNEED -> dropped
+    assert p.rss_bytes() == 0
+    assert "pagedkv" in gsys.tenants()
+
+
+def test_spill_and_fixed_read_roundtrip(gsys):
+    """Evicting a sealed block PWRITE64s its payload; the next prefix hit
+    revives the exact bytes via PREAD64_FIXED into the registered staging
+    buffer (no heap resolve on the read path)."""
+    spill = tempfile.mktemp(suffix=".kvspill")
+    p = _pool(4)                       # null + 3 usable
+    p.bind_genesys(gsys, block_bytes=256, spill_path=spill)
+    payload = bytes(np.random.default_rng(0).integers(
+        0, 256, size=256, dtype=np.uint8))
+    p.extractor = lambda bid: payload
+    try:
+        prompt = list(range(BS))
+        p.retire(p.alloc(1), prompt_tokens=prompt)     # sealed, cached
+        working = p.alloc(3)                           # forces the eviction
+        assert p.stats.evictions == 1 and p.stats.spill_writes == 1
+        p.retire(working)                              # room for the revival
+        ids, fetches = p.acquire_prefix(prompt)
+        assert p.stats.fixed_reads == 1
+        assert len(ids) == 1 and len(fetches) == 1
+        bid, got = fetches[0]
+        assert bid == ids[0] and got == payload
+    finally:
+        if os.path.exists(spill):
+            os.unlink(spill)
+
+
+# ------------------------------------------- engine vs dense reference ------
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, params_dtype="float32",
+                               compute_dtype="float32",
+                               kv_cache_dtype="float32")
+
+
+def _model(mesh11):
+    from repro.configs import get_config
+    from repro.models.registry import get_api
+    from repro.sharding import rules_for
+    cfg = _f32(get_config("internlm2-20b").reduced())
+    rules = rules_for(cfg, mesh11)
+    api = get_api(cfg)
+    params, _ = api.init(jax.random.PRNGKey(1), cfg)
+    return cfg, rules, api, params
+
+
+def _dense_reference(cfg, rules, api, params, prompt, budget):
+    """Teacher-forced prefill + greedy decode on the carried dense cache."""
+    from repro.train.steps import make_serve_step
+    serve = make_serve_step(cfg, rules)
+    cache = api.init_cache(cfg, 1, 64)
+    toks = [int(t) for t in prompt]
+    gen = []
+    for i in range(len(prompt) + budget - 1):
+        nxt, cache = serve(params, cache,
+                           jnp.asarray([[toks[i]]], jnp.int32),
+                           jnp.full((1,), i, jnp.int32))
+        if i >= len(prompt) - 1:
+            gen.append(int(nxt[0]))
+            toks.append(gen[-1])
+    return gen
+
+
+def test_engine_matches_dense_reference_with_churn(mesh11):
+    """Staggered admissions/retirements mid-decode: every request's
+    continuation equals its solo dense decode — slot churn, block-table
+    indirection and null-block masking never leak across rows."""
+    from repro.serving.engine import make_engine
+    cfg, rules, api, params = _model(mesh11)
+    rng = np.random.default_rng(5)
+    n_req = 6
+    reqs = [(rng.integers(1, cfg.vocab_size, size=rng.integers(1, 10))
+             .astype(np.int32), int(rng.integers(2, 6)))
+            for _ in range(n_req)]
+    eng = make_engine(cfg, rules, params, n_slots=3, n_blocks=32,
+                      block_size=BS, jit=True)
+    done = {}
+    with mesh11:
+        want = {i: _dense_reference(cfg, rules, api, params, p, b)
+                for i, (p, b) in enumerate(reqs)}
+        pending = list(enumerate(reqs))
+        while pending or eng.n_active:
+            while pending and eng.admit(pending[0][1][0], pending[0][1][1],
+                                        meta=pending[0][0]):
+                pending.pop(0)          # arrivals land mid-decode
+            for meta, gen in eng.step():
+                done[meta] = gen
+    assert done == want
+    assert eng.stats.admitted == n_req and eng.stats.retired == n_req
+    assert eng.stats.occupancy() > 1.0  # the point of continuous batching
+    assert eng.pool.stats.blocks_in_use == 0
+
+
+def test_engine_prefix_reuse_and_spill_revival_exact(mesh11, gsys):
+    """Shared-prefix admission skips sealed-block prefill and — after the
+    prefix is evicted to the spill file — revives it through
+    PREAD64_FIXED + arena install, with token-identical output."""
+    from repro.serving.engine import make_engine
+    cfg, rules, api, params = _model(mesh11)
+    spill = tempfile.mktemp(suffix=".kvspill")
+    eng = make_engine(cfg, rules, params, n_slots=2, n_blocks=12,
+                      block_size=BS, max_blocks_per_seq=10, gsys=gsys,
+                      spill_path=spill)
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(1, cfg.vocab_size, size=2 * BS).tolist()
+    p1 = np.asarray(prefix + [17], np.int32)
+    p2 = np.asarray(prefix + [23], np.int32)
+    try:
+        with mesh11:
+            want1 = _dense_reference(cfg, rules, api, params, p1, 3)
+            want2 = _dense_reference(cfg, rules, api, params, p2, 3)
+            assert eng.admit(p1, 3)
+            (_, gen1), = eng.drain()
+            saved0 = eng.stats.prefill_steps_saved
+            assert eng.admit(p2, 3)    # hits the sealed prefix in-arena
+            (_, gen2), = eng.drain()
+            assert eng.stats.prefill_steps_saved - saved0 == 2 * BS
+            assert eng.pool.stats.prefix_hits == 2
+            # evict the sealed prefix to spill (10 wanted, 9 free)...
+            assert eng.admit(np.asarray([5], np.int32), 10 * BS)
+            eng.drain()
+            assert eng.pool.stats.spill_writes >= 1
+            # ...and revive it: PREAD64_FIXED + _install_block
+            assert eng.admit(p2, 3)
+            (_, gen3), = eng.drain()
+            assert eng.pool.stats.fixed_reads >= 1
+        assert gen1 == want1
+        assert gen2 == want2 and gen3 == want2
+    finally:
+        if os.path.exists(spill):
+            os.unlink(spill)
+
+
+def test_engine_admission_backpressure(mesh11):
+    """admit() returns False — claiming nothing — on slot or block
+    exhaustion, and the request succeeds after retirements."""
+    from repro.serving.engine import make_engine
+    cfg, rules, api, params = _model(mesh11)
+    eng = make_engine(cfg, rules, params, n_slots=2, n_blocks=9,
+                      block_size=BS, max_blocks_per_seq=4, jit=False)
+    with mesh11:
+        assert eng.admit(np.asarray([3], np.int32), 2 * BS)   # 2 blocks
+        assert eng.admit(np.asarray([4], np.int32), 2 * BS)
+        in_use = eng.pool.stats.blocks_in_use
+        assert not eng.admit(np.asarray([5], np.int32), 2)    # slots full
+        assert eng.pool.stats.blocks_in_use == in_use
+        eng.drain()
+        assert eng.admit(np.asarray([5], np.int32), 2)
+        # block-table width is a hard cap, not a soft failure
+        with pytest.raises(ValueError):
+            eng.admit(np.asarray([6], np.int32), 5 * BS)
+        eng.drain()
+    assert eng.pool.stats.blocks_in_use == 0

@@ -1,8 +1,12 @@
 """End-to-end system tests: GENESYS-serviced training with checkpoint/
-restart, HLO cost model sanity, and the dry-run plumbing on a host mesh."""
+restart, HLO cost model sanity, the dry-run plumbing on a host mesh, and
+the UDP model-serving loops (eager, bucketed and continuous)."""
 import os
+import socket
 import subprocess
 import sys
+import threading
+import time
 from pathlib import Path
 
 import jax
@@ -173,3 +177,155 @@ def test_compressed_crosspod_reduce_multidevice():
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=300)
     assert "COMPRESS_REDUCE_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------------------------------ UDP model-serving loop ----
+
+def _fake_serve_fn(params, cache, cur, cl):
+    """Deterministic decode stub: next token = 2*cur + 1 (cache ignored),
+    so any path's continuation is checkable without a model compile."""
+    return cur.reshape(-1) * 2 + 1, cache
+
+
+def _fake_paged_step(params, arenas, bt, cur, cl):
+    return cur[:, 0] * 2 + 1, arenas
+
+
+def _chain(last, n):
+    out = []
+    for _ in range(n):
+        last = 2 * last + 1
+        out.append(last)
+    return out
+
+
+def _serve_requests(gsys, srv, serve, reqs, *, n_replies):
+    """Run ``serve(reply_port)`` on a daemon thread, fire each int32
+    request at the server, collect ``n_replies`` datagrams, and assert
+    the serve loop actually terminated."""
+    port = gsys.table._sockets[srv.fd].getsockname()[1]
+    client = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    client.bind(("127.0.0.1", 0))
+    client.settimeout(10)
+    th = threading.Thread(target=lambda: serve(client.getsockname()[1]),
+                          daemon=True)
+    th.start()
+    time.sleep(0.05)
+    for r in reqs:
+        client.sendto(np.asarray(r, np.int32).tobytes(), ("127.0.0.1", port))
+    replies = []
+    try:
+        for _ in range(n_replies):
+            data, _ = client.recvfrom(4096)
+            replies.append(np.frombuffer(data, np.int32).tolist())
+    finally:
+        client.close()
+    th.join(20)
+    assert not th.is_alive()       # the loop's stop conditions fired
+    return replies
+
+
+def test_serve_model_mixed_prompt_lengths_one_bucket(gsys):
+    """One poll batch with three different prompt lengths AND budgets:
+    the bucketed decode answers each tag with its own continuation, in a
+    single bucket whose dispatch count is its longest member's budget."""
+    from repro.serving.server import GenesysUdpServer
+    cache = {"k": jnp.zeros((1, 1), jnp.float32)}
+    srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                           batch_window_s=0.2, use_ring=True)
+    reqs = [[2, 101, 7],            # [budget, tag, prompt...]
+            [3, 102, 5, 9],
+            [1, 103, 1, 2, 3, 4]]
+    replies = _serve_requests(
+        gsys, srv,
+        lambda rp: srv.serve_model(_fake_serve_fn, {}, cache, n_batches=1,
+                                   reply_port=rp, max_tokens=8,
+                                   batch_decode=True,
+                                   per_request_tokens=True),
+        reqs, n_replies=3)
+    got = {r[0]: r[1:] for r in replies}
+    assert got == {101: _chain(7, 2), 102: _chain(9, 3), 103: _chain(4, 1)}
+    assert srv.stats.decode_buckets == 1
+    assert srv.stats.decode_dispatches == 3    # longest budget bounds it
+    assert srv.stats.decode_steps == 2 + 3 + 1
+    srv.close()
+
+
+def test_serve_model_idle_poll_termination(gsys):
+    """A lost datagram must not strand the loop: with ``n_requests``
+    unmet, ``max_idle_polls`` consecutive empty polls end the serve."""
+    from repro.serving.server import GenesysUdpServer
+    cache = {"k": jnp.zeros((1, 1), jnp.float32)}
+    srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                           batch_window_s=0.02)
+    gsys.table._sockets[srv.fd].settimeout(0.05)   # cheap idle polls
+    replies = _serve_requests(
+        gsys, srv,
+        lambda rp: srv.serve_model(_fake_serve_fn, {}, cache, n_batches=50,
+                                   reply_port=rp, max_tokens=8,
+                                   n_requests=2, max_idle_polls=3,
+                                   per_request_tokens=True),
+        [[2, 7, 11]], n_replies=1)                 # one of the two arrives
+    assert replies == [[7] + _chain(11, 2)]
+    assert srv.stats.requests == 1                 # exited via idle polls
+    srv.close()
+
+
+def test_serve_model_batch_matches_eager_per_request_budgets(gsys):
+    """batch_decode=True with per-request budgets answers every tag with
+    exactly the eager path's tokens — in max(budget) dispatches instead
+    of sum(budget)."""
+    from repro.serving.server import GenesysUdpServer
+    cache = {"k": jnp.zeros((1, 1), jnp.float32)}
+    reqs = [[4, 1, 3], [2, 2, 5, 6], [3, 3, 2]]
+    out = {}
+    for batch in (False, True):
+        srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                               batch_window_s=0.2, use_ring=True)
+        replies = _serve_requests(
+            gsys, srv,
+            lambda rp, s=srv, b=batch: s.serve_model(
+                _fake_serve_fn, {}, cache, n_batches=1, reply_port=rp,
+                max_tokens=8, batch_decode=b, per_request_tokens=True),
+            reqs, n_replies=3)
+        out[batch] = ({tuple(r) for r in replies},
+                      srv.stats.decode_dispatches)
+        srv.close()
+    assert out[True][0] == out[False][0]
+    assert out[False][1] == 4 + 2 + 3      # one dispatch per token step
+    assert out[True][1] == 4               # longest member bounds the bucket
+
+
+def test_serve_continuous_udp_end_to_end(gsys):
+    """serve_model_continuous over UDP with a stub engine: a short
+    request admitted mid-decode overtakes a long one (tags correlate the
+    out-of-order completions), occupancy reflects the overlap, and the
+    loop exits via idle polls when traffic dies short of n_requests."""
+    from repro.serving.engine import ContinuousBatchEngine
+    from repro.serving.pagedkv import PagedKVPool
+    from repro.serving.server import GenesysUdpServer
+    NB, BS = 8, 4
+    arenas = {"k": jnp.zeros((1, NB, BS, 1, 1)),
+              "v": jnp.zeros((1, NB, BS, 1, 1))}
+    eng = ContinuousBatchEngine(_fake_paged_step, {}, arenas,
+                                PagedKVPool(NB, BS), n_slots=2,
+                                max_blocks_per_seq=4)
+    srv = GenesysUdpServer(gsys, port=0, max_batch=4, payload=256,
+                           batch_window_s=0.02, use_ring=True)
+    gsys.table._sockets[srv.fd].settimeout(0.05)
+    reqs = [[6, 900, 3],       # long budget: admitted first, finishes last
+            [1, 901, 2, 4]]    # short: retires mid-decode of the long one
+    replies = _serve_requests(
+        gsys, srv,
+        lambda rp: srv.serve_model_continuous(eng, reply_port=rp,
+                                              n_requests=3,
+                                              max_idle_polls=3),
+        reqs, n_replies=2)
+    got = {r[0]: r[1:] for r in replies}
+    assert got == {900: _chain(3, 6), 901: _chain(4, 1)}
+    assert replies[0][0] == 901            # overtook the in-flight request
+    assert eng.stats.admitted == 2 and eng.stats.retired == 2
+    assert eng.stats.occupancy() > 1.0
+    assert eng.pool.stats.blocks_in_use == 0
+    assert srv.stats.decode_steps > srv.stats.decode_dispatches
+    srv.close()

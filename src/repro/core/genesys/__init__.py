@@ -74,7 +74,32 @@ fixed-capacity wraparound event ring — off by default, enabled with
 
 When the event ring wraps, old events are overwritten (histograms cover
 the most recent window; ``telemetry()["trace"]["dropped"]`` counts the
-loss) and the counters — which never drop — remain exact.
+loss) and the counters — which never drop — remain exact. The same
+no-silent-loss rule applies to the Chrome-trace export: spans elided by
+its ``max_spans`` cap are counted in
+``trace["metadata"]["dropped_spans"]``.
+
+Metrics (``metrics.py``): where Telemetry is one snapshot, the lazy
+``Genesys.metrics`` :class:`~repro.core.genesys.metrics.MetricsRegistry`
+is the *time series* over snapshots — windowed counters, gauges, and
+log2-bucket latency histograms captured into a fixed ring of windows on
+every ``tick()`` (one vectorized array copy, no per-series Python).
+First access installs a collector mirroring the full ``telemetry()``
+snapshot — totals, per-sysno/per-tenant counters, trace-derived p99
+gauges, and every serving source registered via
+``Genesys.attach_stats`` (engine, paged KV pool, UDP server) — so
+windowed ``rate()`` / ``quantile()`` and the per-tenant SLO
+**burn-rate** gauges (``MetricsRegistry.set_slo``) come for free.
+Exposition is Prometheus text format, served three ways: a METRICS UDP
+op on the serving socket, the ``launch/serve --metrics-port`` TCP
+endpoint (:class:`~repro.core.genesys.metrics.MetricsHttpServer`:
+``GET /metrics`` scrapes, ``GET /telemetry`` returns the full JSON
+snapshot with no datagram ceiling), and ``prometheus_text()`` directly.
+Request-scoped tracing ties the layers together: the serving loop
+allocates a span id per request, syscalls submitted under
+``Tracer.span`` carry it in their SUBMIT aux, the continuous engine
+records per-span decode steps, and ``export_chrome_trace`` renders one
+pid-5 track per request nesting its steps and syscalls.
 
 Serving (``repro.serving``): the paper's echo server grown into a model
 server whose data plane is genesys syscalls end to end. Network I/O is
@@ -107,6 +132,9 @@ from repro.core.genesys.sched import (
     SchedStats, StrictPriority, TokenBucket, WeightedFair,
 )
 from repro.core.genesys.tenant import Tenant, TenantStats
+from repro.core.genesys.metrics import (
+    MetricsHttpServer, MetricsRegistry, install_genesys_collector,
+)
 from repro.core.genesys.trace import (
     Counters, EventRing, Tracer, TraceChannel, format_summary,
     latency_histograms, summary_dict,
@@ -131,5 +159,6 @@ __all__ = [
     "Tenant", "TenantStats",
     "Counters", "EventRing", "Tracer", "TraceChannel",
     "format_summary", "latency_histograms", "summary_dict",
+    "MetricsHttpServer", "MetricsRegistry", "install_genesys_collector",
     "Genesys", "Granularity", "Ordering", "GenesysConfig", "table",
 ]

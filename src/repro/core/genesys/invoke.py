@@ -85,6 +85,9 @@ class GenesysConfig:
     # ring wraps, histograms degrade gracefully — counters never drop)
     trace: bool = False
     trace_capacity: int = 1 << 16  # event-ring entries (32 B each)
+    # genesys.metrics: windowed time-series history kept by the lazy
+    # Genesys.metrics registry (one snapshot per tick)
+    metrics_windows: int = 120
 
 
 # ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
@@ -196,6 +199,10 @@ class Genesys:
         # genesys.trace: one tracer shared by every channel (doorbell
         # executor, shared ring, tenant rings); None = tracing off
         self._tracer: Tracer | None = None
+        # genesys.metrics: serving-stats registry (attach_stats) + lazy
+        # time-series registry (the metrics property)
+        self._ext_stats: dict[str, object] = {}
+        self._metrics = None
         if config.trace:
             self._tracer_locked()
 
@@ -292,6 +299,29 @@ class Genesys:
         """The shared lifecycle tracer, or ``None`` when tracing is off."""
         return self._tracer
 
+    # ------------- genesys.metrics: time-series registry -------------------
+    @property
+    def metrics(self):
+        """The lazy :class:`~repro.core.genesys.metrics.MetricsRegistry`
+        for this instance; first access creates it and installs the
+        telemetry-mirroring collector, so every tick (scrape) carries the
+        full genesys counter/histogram state with zero extra wiring."""
+        with self._lock:
+            if self._metrics is None:
+                from repro.core.genesys.metrics import (
+                    MetricsRegistry, install_genesys_collector)
+                self._metrics = MetricsRegistry(
+                    n_windows=self.config.metrics_windows)
+                install_genesys_collector(self._metrics, self)
+            return self._metrics
+
+    def attach_stats(self, name: str, counters) -> None:
+        """Register an external (serving-side) ``trace.Counters`` record
+        under ``name``; its snapshot joins ``telemetry()["serving"]`` —
+        the one-coherent-snapshot contract extended beyond core genesys."""
+        with self._lock:
+            self._ext_stats[name] = counters
+
     def telemetry(self) -> dict:
         """One coherent observability snapshot: every subsystem's counters
         (executor, shared ring + fuse, scheduler, syscall table, tenants)
@@ -308,6 +338,7 @@ class Genesys:
             sched = self._sched
             tenants = dict(self._tenants)
             tracer = self._tracer
+            ext = dict(self._ext_stats)
         # downstream first: reaped before completed before submitted, so
         # monotone counters can only make the invariant slacker, not break
         rings = ([("ring", ring)] if ring is not None else []) + \
@@ -333,6 +364,7 @@ class Genesys:
             "histograms": tracer.histograms() if tracer is not None else {},
             "trace": tracer.meta() if tracer is not None
             else {"enabled": False},
+            "serving": {name: c.snapshot() for name, c in ext.items()},
         }
         for name, t in tenants.items():
             out["tenants"][name] = {

@@ -50,9 +50,25 @@ Event vocabulary (the lifecycle, ring path and doorbell equivalents):
     FALLBACK    ring SQ overflow routed the call onto the doorbell path
     THROTTLE    QoS admission delayed the submission (aux = delay µs)
     REJECT      QoS admission refused the submission (aux = call count)
+
+Request-scoped events (the serving stack, genesys.metrics PR): a serving
+request is a *span* keyed by its wire tag (seq = span id, sysno =
+``REQ_SYSNO``):
+
+    REQ_BEGIN   request parsed off the socket (aux = token budget)
+    REQ_END     reply handed to the send path (aux = tokens generated)
+    STEP        one engine decode dispatch, recorded once per step as a
+                block over the active slots' span ids (aux = step
+                duration ns, ts = step start)
+
+While a thread holds :meth:`Tracer.span`, every ring SUBMIT it records
+carries the span id in ``aux`` — so the Chrome exporter can nest the
+request's own syscalls (the reply SENDTO, KV spill/revival I/O) inside
+its request span on the pid-5 "request" track.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import json
@@ -80,13 +96,22 @@ EV_IRQ = 7
 EV_FALLBACK = 8
 EV_THROTTLE = 9
 EV_REJECT = 10
+EV_REQ_BEGIN = 11
+EV_REQ_END = 12
+EV_STEP = 13
 
 EV_NAMES = {
     EV_SUBMIT: "SUBMIT", EV_SQ_POP: "SQ_POP", EV_FUSE_MERGE: "FUSE_MERGE",
     EV_DISPATCH: "DISPATCH", EV_COMPLETE: "COMPLETE", EV_REAP: "REAP",
     EV_IRQ: "IRQ", EV_FALLBACK: "FALLBACK", EV_THROTTLE: "THROTTLE",
-    EV_REJECT: "REJECT",
+    EV_REJECT: "REJECT", EV_REQ_BEGIN: "REQ_BEGIN", EV_REQ_END: "REQ_END",
+    EV_STEP: "STEP",
 }
+
+# the sysno request-span events carry (a request is not one syscall);
+# latency_histograms names it "REQUEST" so the serving channel's
+# end-to-end wall-time histogram reads like any syscall stage
+REQ_SYSNO = -2
 
 # Lifecycle stages as (name, from_event, to_event) pairs; the histogram
 # matcher joins the two event sets on (channel, seq). Grouping metadata
@@ -99,6 +124,7 @@ STAGES = (
     ("total", EV_SUBMIT, EV_COMPLETE),      # submit -> retval exists
     ("reap", EV_COMPLETE, EV_REAP),         # retval -> CQE drained
     ("irq_total", EV_IRQ, EV_COMPLETE),     # doorbell end-to-end
+    ("request", EV_REQ_BEGIN, EV_REQ_END),  # serving request wall time
 )
 
 EVENT_DTYPE = np.dtype([
@@ -332,19 +358,24 @@ class TraceChannel:
         self.tid = tid
         self.name = name
 
-    def rec(self, ev: int, sysno: int, seq: int, aux: int = 0) -> None:
-        self.tracer.events.append(ev, self.tid, sysno, seq, aux)
+    def rec(self, ev: int, sysno: int, seq: int, aux: int = 0,
+            ts: int | None = None) -> None:
+        self.tracer.events.append(ev, self.tid, sysno, seq, aux, ts=ts)
 
     def rec_block(self, ev: int, sysnos, seqs, aux=0,
-                  own: bool = False) -> None:
+                  own: bool = False, ts: int | None = None) -> None:
         self.tracer.events.append_block(ev, self.tid, sysnos, seqs, aux,
-                                        own=own)
+                                        ts=ts, own=own)
 
     def next_seq(self) -> int:
         return self.tracer.next_seq()
 
     def thread_aux(self) -> int:
         return self.tracer.thread_id()
+
+    def span_aux(self) -> int:
+        """The calling thread's current request-span id (0 = none)."""
+        return self.tracer.current_span()
 
 
 class Tracer:
@@ -360,6 +391,30 @@ class Tracer:
         # doorbell-path calls have no user_data; they draw per-call keys
         # here (itertools.count: one atomic C-level next() per call)
         self._seq = itertools.count(1)
+        # request-span context: per-thread current span id; SUBMIT records
+        # stamp it into aux so a request's own syscalls nest under its span
+        self._span = threading.local()
+
+    # -- request-span context -------------------------------------------------
+    def current_span(self) -> int:
+        return getattr(self._span, "v", 0)
+
+    def set_span(self, span_id: int) -> int:
+        """Set the calling thread's span context; returns the previous
+        value (0 = none) so callers can restore it."""
+        prev = getattr(self._span, "v", 0)
+        self._span.v = int(span_id)
+        return prev
+
+    @contextlib.contextmanager
+    def span(self, span_id: int):
+        """Scope a request-span id over the calling thread: ring SUBMITs
+        recorded inside carry ``span_id`` in their aux column."""
+        prev = self.set_span(span_id)
+        try:
+            yield
+        finally:
+            self._span.v = prev
 
     # -- interning ------------------------------------------------------------
     def channel(self, name: str) -> TraceChannel:
@@ -418,13 +473,27 @@ class Tracer:
         (pop -> worker handoff per poller thread), pid 3 "worker"
         (bundle execution per worker thread, with fused groups as
         attributed spans), pid 4 "tenant" (per-call submit -> complete
-        spans per channel, REAP instants). Returns the trace dict."""
+        spans per channel, REAP instants), pid 5 "request" (one track
+        per serving request span id: the request's wall-time span, its
+        engine decode-step spans, and every span-attributed syscall
+        nested inside). Spans beyond ``max_spans`` are counted, not
+        silently elided: ``trace["metadata"]["dropped_spans"]`` reports
+        the loss. Returns the trace dict."""
         evs = self.events.snapshot()
         ch_names = self.channel_names()
         th_names = self.thread_names()
         out: list[dict] = []
+        dropped = 0
+
+        def put(rec: dict) -> None:
+            nonlocal dropped
+            if len(out) >= max_spans:
+                dropped += 1
+            else:
+                out.append(rec)
+
         for pid, pname in ((1, "ring"), (2, "poller"), (3, "worker"),
-                           (4, "tenant")):
+                           (4, "tenant"), (5, "request")):
             out.append({"ph": "M", "pid": pid, "tid": 0,
                         "name": "process_name", "args": {"name": pname}})
         for pid in (1, 4):
@@ -445,17 +514,16 @@ class Tracer:
                 A, B, ia, ib = _match_events(evs, ea, eb)
                 for j in range(len(ia)):
                     a, b = A[ia[j]], B[ib[j]]
-                    if len(out) >= max_spans:
-                        return
                     rec = {"ph": "X", "pid": pid,
                            "tid": int(a["aux"] if tid_from == "aux"
-                                      else a["tenant"]),
+                                      else (a["seq"] if tid_from == "seq"
+                                            else a["tenant"])),
                            "ts": us(a["ts"]),
                            "dur": max(0.0, us(b["ts"]) - us(a["ts"])),
                            "name": namer(a)}
                     if args is not None:
                         rec["args"] = args(a, b)
-                    out.append(rec)
+                    put(rec)
 
             names = _sys_names()
 
@@ -473,6 +541,34 @@ class Tracer:
             spans(EV_IRQ, EV_COMPLETE, 4, "tenant",
                   lambda a: f"irq:{sysname(a)}",
                   args=lambda a, b: {"seq": int(a["seq"])})
+            # pid 5 "request": one track per serving request span id.
+            # The request wall-time span, then its decode steps, then the
+            # syscalls whose SUBMIT was recorded under Tracer.span() —
+            # same tid, so Chrome/Perfetto nest them by time containment.
+            spans(EV_REQ_BEGIN, EV_REQ_END, 5, "seq",
+                  lambda a: "request",
+                  args=lambda a, b: {"span": int(a["seq"]),
+                                     "budget": int(a["aux"]),
+                                     "tokens": int(b["aux"])})
+            for r in evs[evs["ev"] == EV_STEP]:
+                put({"ph": "X", "pid": 5, "tid": int(r["seq"]),
+                     "ts": us(r["ts"]), "dur": max(0.0, int(r["aux"]) / 1e3),
+                     "name": f"step:{int(r['sysno'])}"})
+            A, B, ia, ib = _match_events(evs, EV_SUBMIT, EV_COMPLETE)
+            for j in range(len(ia)):
+                a, b = A[ia[j]], B[ib[j]]
+                if int(a["aux"]) == 0:
+                    continue            # not recorded under a span context
+                put({"ph": "X", "pid": 5, "tid": int(a["aux"]),
+                     "ts": us(a["ts"]),
+                     "dur": max(0.0, us(b["ts"]) - us(a["ts"])),
+                     "name": f"sys:{sysname(a)}",
+                     "args": {"seq": int(a["seq"])}})
+            for seq in np.unique(
+                    evs[evs["ev"] == EV_REQ_BEGIN]["seq"])[:256]:
+                out.append({"ph": "M", "pid": 5, "tid": int(seq),
+                            "name": "thread_name",
+                            "args": {"name": f"req:{int(seq)}"}})
             # fused bundles: one span per merge group, nested inside the
             # worker bundle span, members attributed by user_data
             merges = evs[evs["ev"] == EV_FUSE_MERGE]
@@ -492,10 +588,10 @@ class Tracer:
                             + grp["seq"]).tolist()
                     ds = [dmap[k] for k in keys if k in dmap]
                     cs = [cmap[k] for k in keys if k in cmap]
-                    if not ds or not cs or len(out) >= max_spans:
+                    if not ds or not cs:
                         continue
                     ts_lo = min(d[0] for d in ds)
-                    out.append({
+                    put({
                         "ph": "X", "pid": 3, "tid": int(ds[0][1]),
                         "ts": us(ts_lo),
                         "dur": max(0.0, us(max(cs)) - us(ts_lo)),
@@ -503,11 +599,12 @@ class Tracer:
                         "args": {"group": int(gid),
                                  "members": grp["seq"].tolist()},
                     })
-            reaps = evs[evs["ev"] == EV_REAP]
-            for r in reaps[:max(0, max_spans - len(out))]:
-                out.append({"ph": "i", "pid": 4, "tid": int(r["tenant"]),
-                            "ts": us(r["ts"]), "name": "reap", "s": "t"})
-        trace = {"traceEvents": out, "displayTimeUnit": "ms"}
+            for r in evs[evs["ev"] == EV_REAP]:
+                put({"ph": "i", "pid": 4, "tid": int(r["tenant"]),
+                     "ts": us(r["ts"]), "name": "reap", "s": "t"})
+        trace = {"traceEvents": out, "displayTimeUnit": "ms",
+                 "metadata": {"dropped_spans": dropped,
+                              "max_spans": max_spans}}
         with open(path, "w") as f:
             json.dump(trace, f)
         return trace
@@ -570,7 +667,8 @@ def latency_histograms(evs: np.ndarray, channel_names: list[str],
             sysno = int(np.int32(g & 0xFFFFFFFF))
             cname = (channel_names[tid] if tid < len(channel_names)
                      else str(tid))
-            sname = names.get(sysno, str(sysno))
+            sname = names.get(
+                sysno, "REQUEST" if sysno == REQ_SYSNO else str(sysno))
             out.setdefault(cname, {}).setdefault(sname, {})[stage] = {
                 "count": n,
                 "p50_us": float(2.0 ** p50_b),
@@ -606,7 +704,8 @@ def _tenant_p99s(snap: dict) -> dict[str, float]:
     for cname, per_sys in (snap.get("histograms") or {}).items():
         worst = 0.0
         for stages in per_sys.values():
-            st = stages.get("total") or stages.get("irq_total")
+            st = (stages.get("total") or stages.get("irq_total")
+                  or stages.get("request"))
             if st:
                 worst = max(worst, st["p99_us"])
         if worst:

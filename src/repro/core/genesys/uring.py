@@ -332,9 +332,12 @@ class SyscallRing:
                 if tr is not None:
                     # keyed by user_data: the seq every later lifecycle
                     # event (pop/dispatch/complete/reap) carries. own=True:
-                    # this chunk matrix is local and never written again
+                    # this chunk matrix is local and never written again.
+                    # aux carries the submitting thread's request-span id
+                    # (0 = none) so request-scoped tracing can attribute
+                    # every syscall to the serving request that caused it
                     tr.rec_block(EV_SUBMIT, entries[:, 3], entries[:, 1],
-                                 own=True)
+                                 aux=tr.span_aux(), own=True)
                 fell_back += self._publish(entries, sq_full, spin_timeout_s,
                                            reserved=reserved)
                 published += k

@@ -22,6 +22,30 @@ import jax
 import jax.numpy as jnp
 
 
+def start_stats_reporter(gsys, interval_s: float, *, out=print
+                         ) -> tuple[threading.Thread, threading.Event]:
+    """Start the ``--stats-interval`` reporter: a daemon thread printing
+    one :func:`~repro.core.genesys.trace.format_summary` line (rates from
+    consecutive telemetry snapshots) every ``interval_s`` seconds via
+    ``out``. Returns ``(thread, stop_event)``; set the event and join the
+    thread for a clean shutdown."""
+    from repro.core.genesys import format_summary
+
+    stop = threading.Event()
+
+    def _report() -> None:
+        prev, prev_t = None, time.monotonic()
+        while not stop.wait(interval_s):
+            snap = gsys.telemetry()
+            now = time.monotonic()
+            out(format_summary(snap, prev, now - prev_t))
+            prev, prev_t = snap, now
+
+    th = threading.Thread(target=_report, daemon=True, name="serve-stats")
+    th.start()
+    return th, stop
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -59,6 +83,16 @@ def main() -> None:
     ap.add_argument("--stats-interval", type=float, default=0.0, metavar="N",
                     help="print a one-line telemetry summary (throughput, "
                          "per-tenant p99, fuse ratio) every N seconds")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the genesys.metrics Prometheus exposition "
+                         "over TCP: GET /metrics scrapes, GET /telemetry "
+                         "returns the full JSON snapshot (0 = ephemeral)")
+    ap.add_argument("--slo-us", type=float, default=None, metavar="US",
+                    help="declare a per-request latency SLO (µs) over the "
+                         "serving wall-time histogram; burn-rate gauges "
+                         "are derived every metrics tick")
+    ap.add_argument("--slo-target", type=float, default=0.999,
+                    help="fraction of requests that must meet --slo-us")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -78,19 +112,22 @@ def main() -> None:
     if args.tenants:
         gsys.use_policies(TokenBucket(), StrictPriority(), WeightedFair())
 
-    stop_stats = threading.Event()
-    reporter = None
+    reporter = stop_stats = None
     if args.stats_interval > 0:
-        def _report() -> None:
-            prev, prev_t = None, time.monotonic()
-            while not stop_stats.wait(args.stats_interval):
-                snap = gsys.telemetry()
-                now = time.monotonic()
-                print(format_summary(snap, prev, now - prev_t), flush=True)
-                prev, prev_t = snap, now
-        reporter = threading.Thread(target=_report, daemon=True,
-                                    name="serve-stats")
-        reporter.start()
+        reporter, stop_stats = start_stats_reporter(
+            gsys, args.stats_interval,
+            out=lambda line: print(line, flush=True))
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from repro.core.genesys.metrics import MetricsHttpServer
+        if args.slo_us is not None:
+            gsys.metrics.set_slo("genesys_request_wall_us", args.slo_us,
+                                 target=args.slo_target)
+        metrics_srv = MetricsHttpServer(gsys.metrics,
+                                        port=args.metrics_port,
+                                        telemetry_fn=gsys.telemetry)
+        print(f"metrics exposition on :{metrics_srv.port} "
+              f"(/metrics, /telemetry)", flush=True)
     mesh = make_host_mesh()
     rules = rules_for(cfg, mesh)
     api = get_api(cfg)
@@ -132,6 +169,8 @@ def main() -> None:
         stop_stats.set()
         reporter.join(timeout=2)
         print(format_summary(gsys.telemetry()), flush=True)
+    if metrics_srv is not None:
+        metrics_srv.close()
     srv.close()
     if args.trace_out:
         gsys.export_chrome_trace(args.trace_out)

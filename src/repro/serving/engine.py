@@ -27,11 +27,13 @@ but never fed (its KV would be dead).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.genesys.trace import EV_STEP, Counters
 from repro.serving.pagedkv import NULL_BLOCK, PagedKVPool, PoolExhausted
 
 
@@ -57,6 +59,7 @@ class _Slot:
     gen: list = field(default_factory=list)
     blocks: list = field(default_factory=list)
     cache_len: int = 0
+    span: int = 0                 # request-scoped trace span id (0 = none)
 
 
 class ContinuousBatchEngine:
@@ -80,10 +83,31 @@ class ContinuousBatchEngine:
         self._cl = np.zeros((self.n_slots,), np.int32)
         self._cur = np.zeros((self.n_slots, 1), np.int32)
         self._slots: list[_Slot | None] = [None] * self.n_slots
-        self.stats = EngineStats()
-        self.serve_stats = stats      # optional server.ServeStats
+        # trace.Counters fold: telemetry snapshots of engine stats are
+        # torn-read-free even while the decode loop runs (attach_stats)
+        self.counters = Counters(EngineStats())
+        if stats is not None and not isinstance(stats, Counters):
+            stats = Counters(stats)
+        self.serve_stats = stats      # optional server-side Counters
+        # request-scoped tracing: the server sets this TraceChannel; each
+        # decode dispatch records one EV_STEP per active span, and
+        # retirement syscalls run under the request's span context
+        self.trace = None
+        self._step_idx = 0
         # wire the pool's eviction spill to the device arenas
         pool.extractor = self._extract_block
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.counters.stats
+
+    @stats.setter
+    def stats(self, new) -> None:
+        # benchmarks reset via ``eng.stats = EngineStats()``; swapping the
+        # wrapped object under the lock keeps every attached reference
+        # (telemetry, collectors) reading the live record
+        with self.counters.lock:
+            self.counters.stats = new
 
     # ------------------------------------------------------- introspection --
     @property
@@ -115,7 +139,8 @@ class ContinuousBatchEngine:
         self.arenas["v"] = self.arenas["v"].at[:, bid].set(jnp.asarray(vb))
 
     # ----------------------------------------------------------- admission --
-    def admit(self, prompt, n_tokens: int, meta=None) -> bool:
+    def admit(self, prompt, n_tokens: int, meta=None,
+              span: int = 0) -> bool:
         """Claim a slot for a request mid-decode. Returns False (admitting
         nothing) when no slot or not enough arena blocks are available —
         the caller keeps the request queued and retries after retirements.
@@ -149,23 +174,29 @@ class ContinuousBatchEngine:
         blocks = reused + fresh
         r = len(reused) * bs                # cache positions already filled
         st = _Slot(meta=meta, prompt=prompt, feed_idx=r + 1, budget=budget,
-                   blocks=blocks, cache_len=r)
+                   blocks=blocks, cache_len=r, span=span)
         self._slots[slot] = st
         self._bt[slot, :] = NULL_BLOCK
         self._bt[slot, :len(blocks)] = blocks
         self._cl[slot] = r
         self._cur[slot, 0] = prompt[r]
-        self.stats.admitted += 1
-        self.stats.prefill_steps_saved += r
+        self.counters.add(admitted=1, prefill_steps_saved=r)
         return True
 
     def _retire(self, slot: int, st: _Slot) -> None:
-        self.pool.retire(st.blocks, prompt_tokens=st.prompt)
+        ch = self.trace
+        if ch is not None and st.span:
+            # retirement syscalls (MADVISE frees, spill PWRITE64s) are
+            # attributed to the request that caused them
+            with ch.tracer.span(st.span):
+                self.pool.retire(st.blocks, prompt_tokens=st.prompt)
+        else:
+            self.pool.retire(st.blocks, prompt_tokens=st.prompt)
         self._slots[slot] = None
         self._bt[slot, :] = NULL_BLOCK
         self._cl[slot] = 0
         self._cur[slot, 0] = 0
-        self.stats.retired += 1
+        self.counters.add(retired=1)
 
     # ---------------------------------------------------------- decoding ----
     def step(self) -> list[tuple[object, list[int]]]:
@@ -176,23 +207,35 @@ class ContinuousBatchEngine:
         active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return []
+        t0 = time.perf_counter_ns()
         nxt, self.arenas = self.serve_step(
             self.params, self.arenas, jnp.asarray(self._bt),
             jnp.asarray(self._cur), jnp.asarray(self._cl))
         nxt = np.asarray(nxt)
-        self.stats.steps += 1
-        self.stats.step_slots += len(active)
+        dur = time.perf_counter_ns() - t0
+        self.counters.add(steps=1, step_slots=len(active))
         if self.serve_stats is not None:
-            self.serve_stats.decode_dispatches += 1
-            self.serve_stats.decode_steps += len(active)
+            self.serve_stats.add(decode_dispatches=1,
+                                 decode_steps=len(active))
+        ch = self.trace
+        if ch is not None:
+            # one self-contained EV_STEP per active request span: ts is
+            # the dispatch start, aux the duration (ns) — no begin/end
+            # pair to join, since a span repeats its seq across steps
+            spans = [s.span for _, s in active if s.span]
+            if spans:
+                ch.rec_block(EV_STEP, self._step_idx, spans, aux=dur,
+                             ts=t0, own=True)
+        self._step_idx += 1
         finished = []
+        prefills = 0
         for i, st in active:
             st.cache_len += 1               # the fed token's KV landed
             if st.feed_idx < len(st.prompt):
                 # still consuming the prompt (teacher forcing)
                 self._cur[i, 0] = st.prompt[st.feed_idx]
                 st.feed_idx += 1
-                self.stats.prefill_steps += 1
+                prefills += 1
             else:
                 st.gen.append(int(nxt[i]))
                 if len(st.gen) >= st.budget:
@@ -201,6 +244,8 @@ class ContinuousBatchEngine:
                     continue
                 self._cur[i, 0] = st.gen[-1]
             self._cl[i] = st.cache_len
+        if prefills:
+            self.counters.add(prefill_steps=prefills)
         return finished
 
     def drain(self) -> list[tuple[object, list[int]]]:
@@ -236,4 +281,5 @@ def make_engine(cfg, rules, params, *, n_slots: int, n_blocks: int,
     if gsys is not None:
         pool.bind_genesys(gsys, block_bytes=eng.block_bytes(),
                           spill_path=spill_path)
+        gsys.attach_stats("engine", eng.counters)
     return eng

@@ -34,8 +34,10 @@ registered-buffer read path skips the per-call heap resolve entirely
 round-trip and one memcpy.
 
 Single-owner discipline: the pool is mutated only from the engine's
-scheduler loop thread; :class:`PagedKVStats` fields are plain ints read
-opportunistically by benchmarks.
+scheduler loop thread; :class:`PagedKVStats` lives behind a
+``trace.Counters`` record (the :attr:`PagedKVPool.counters` fold), so
+``Genesys.telemetry()`` readers and metrics collectors on other threads
+always see a consistent snapshot.
 """
 from __future__ import annotations
 
@@ -48,6 +50,7 @@ import numpy as np
 
 from repro.core.genesys import Sys
 from repro.core.genesys.memory_pool import MADV_DONTNEED
+from repro.core.genesys.trace import Counters
 
 NULL_BLOCK = 0
 
@@ -63,7 +66,9 @@ class PagedKVStats:
     prefix_queries: int = 0     # prompt blocks looked up against the cache
     prefix_hits: int = 0        # lookups served from cache (arena or spill)
     spill_writes: int = 0       # evicted blocks written out via PWRITE64
+    spill_bytes: int = 0        # bytes those spill writes moved
     fixed_reads: int = 0        # spilled blocks revived via PREAD64_FIXED
+    revival_bytes: int = 0      # bytes those revivals read back
     evictions: int = 0          # cached blocks reclaimed for allocation
     sealed: int = 0             # blocks retained in the prefix cache
     blocks_in_use: int = 0      # currently referenced (refcount > 0)
@@ -102,7 +107,7 @@ class PagedKVPool:
         self._by_hash: dict[int, tuple[str, int]] = {}
         # refcount-0 sealed blocks, LRU order (hash -> block_id)
         self._cached: OrderedDict[int, int] = OrderedDict()
-        self.stats = PagedKVStats()
+        self.counters = Counters(PagedKVStats())
         # eviction spill hook: block_id -> serialized block bytes; wired
         # by the engine (only it can read the device arenas)
         self.extractor: Callable[[int], bytes] | None = None
@@ -117,6 +122,17 @@ class PagedKVPool:
         self._stage = None
         self._stage_idx = -1
         self._stage_h = -1
+
+    @property
+    def stats(self) -> PagedKVStats:
+        return self.counters.stats
+
+    @stats.setter
+    def stats(self, new) -> None:
+        # benchmarks reset via ``pool.stats = PagedKVStats()``; swap under
+        # the lock so attached telemetry references keep reading live data
+        with self.counters.lock:
+            self.counters.stats = new
 
     # ------------------------------------------------------------ genesys ----
     def bind_genesys(self, gsys, *, block_bytes: int,
@@ -133,6 +149,7 @@ class PagedKVPool:
         """
         self._gsys = gsys
         self._block_bytes = int(block_bytes)
+        gsys.attach_stats("pagedkv", self.counters)
         self._tenant = gsys.tenant("pagedkv", weight=2.0, fuse=True)
         # one region per block, carved as multi-entry ring submissions
         comps = self._tenant.submit(
@@ -194,7 +211,7 @@ class PagedKVPool:
             self._by_hash.pop(h, None)
             return
         self._by_hash[h] = ("spill", slot)
-        self.stats.spill_writes += 1
+        self.counters.add(spill_writes=1, spill_bytes=self._block_bytes)
 
     def _fetch_spill(self, slot: int) -> bytes:
         """Revive a spilled block: PREAD64_FIXED into the registered
@@ -205,7 +222,7 @@ class PagedKVPool:
                               slot * self._block_bytes)
         if n != self._block_bytes:
             raise OSError(f"short spill read: {n} != {self._block_bytes}")
-        self.stats.fixed_reads += 1
+        self.counters.add(fixed_reads=1, revival_bytes=self._block_bytes)
         self._spill_free.append(slot)
         return bytes(np.asarray(self._stage)[:self._block_bytes].tobytes())
 
@@ -214,9 +231,11 @@ class PagedKVPool:
         return len(self._free) + len(self._cached)
 
     def _use(self, n: int) -> None:
-        self.stats.blocks_in_use += n
-        if self.stats.blocks_in_use > self.stats.peak_blocks_in_use:
-            self.stats.peak_blocks_in_use = self.stats.blocks_in_use
+        def bump(s: PagedKVStats) -> None:
+            s.blocks_in_use += n
+            if s.blocks_in_use > s.peak_blocks_in_use:
+                s.peak_blocks_in_use = s.blocks_in_use
+        self.counters.update(bump)
 
     def _evict_one(self) -> int:
         """Reclaim the least-recently-used cached prefix block (spilling
@@ -226,7 +245,7 @@ class PagedKVPool:
         if self._by_hash.get(h, (None, None))[0] == "arena":
             self._by_hash.pop(h, None)
         self._hash_of[bid] = None
-        self.stats.evictions += 1
+        self.counters.add(evictions=1)
         return bid
 
     def alloc(self, n: int) -> list[int]:
@@ -246,7 +265,7 @@ class PagedKVPool:
             self._hash_of[bid] = None
             self._touch(bid)
             out.append(bid)
-        self.stats.allocs += n
+        self.counters.add(allocs=n)
         self._use(n)
         return out
 
@@ -263,7 +282,7 @@ class PagedKVPool:
         ids: list[int] = []
         fetches: list[tuple[int, bytes]] = []
         for h in chain_hashes(tokens, self.block_size):
-            self.stats.prefix_queries += 1
+            self.counters.add(prefix_queries=1)
             loc = self._by_hash.get(h)
             if loc is None:
                 break
@@ -287,7 +306,7 @@ class PagedKVPool:
                 self._by_hash[h] = ("arena", bid)
                 fetches.append((bid, payload))
                 ids.append(bid)
-            self.stats.prefix_hits += 1
+            self.counters.add(prefix_hits=1)
         return ids, fetches
 
     def retire(self, block_ids, prompt_tokens=None) -> None:
@@ -308,7 +327,7 @@ class PagedKVPool:
                 if self._hash_of[bid] is None:
                     self._by_hash[h] = ("arena", bid)
                     self._hash_of[bid] = h
-                    self.stats.sealed += 1
+                    self.counters.add(sealed=1)
         drop: list[int] = []
         for bid in block_ids:
             if bid == NULL_BLOCK:
@@ -316,7 +335,7 @@ class PagedKVPool:
             self._ref[bid] -= 1
             if self._ref[bid] > 0:
                 continue
-            self.stats.blocks_in_use -= 1
+            self.counters.add(blocks_in_use=-1)
             h = self._hash_of[bid]
             if h is not None and self._by_hash.get(h) == ("arena", bid):
                 self._cached[h] = bid       # park, LRU-evictable
@@ -324,6 +343,6 @@ class PagedKVPool:
             else:
                 self._hash_of[bid] = None
                 self._free.append(bid)
-                self.stats.frees += 1
+                self.counters.add(frees=1)
                 drop.append(bid)
         self._dontneed(drop)

@@ -40,13 +40,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.genesys import Genesys, Sys
-from repro.core.genesys.trace import jsonable, summary_dict
+from repro.core.genesys.trace import (
+    EV_REQ_BEGIN, EV_REQ_END, REQ_SYSNO, Counters, jsonable, summary_dict,
+)
 
 # STATS request op: a datagram ``GSTATS1\0 + uint32 reply_port (LE)``
 # is answered with the server's Genesys.telemetry() snapshot as JSON
-# (the full snapshot when it fits a datagram, else the compact summary)
-# instead of entering the request batch.
+# (the full snapshot when it fits a datagram, else the compact summary,
+# flagged ``"truncated": true`` — the TCP /telemetry endpoint of
+# metrics.MetricsHttpServer always carries the full payload) instead of
+# entering the request batch.
 STATS_MAGIC = b"GSTATS1\x00"
+# METRICS request op: same wire shape, answered with the Prometheus text
+# exposition of Genesys.metrics (ticked on demand, so a UDP scrape sees
+# fresh windows); over-ceiling replies are cut at a line boundary and
+# flagged with a trailing ``# truncated`` comment.
+METRICS_MAGIC = b"GMETRX1\x00"
 _STATS_MAX_DGRAM = 60000      # stay under the UDP payload ceiling
 
 
@@ -65,7 +74,11 @@ class ServeStats:
     decode_dispatches: int = 0
     decode_steps: int = 0
     decode_buckets: int = 0      # batched-decode buckets run
-    stats_requests: int = 0      # STATS ops answered (telemetry snapshots)
+    stats_requests: int = 0      # STATS/METRICS ops answered
+    # continuous-loop admission pressure (queue_depth* are levels)
+    queue_depth: int = 0         # parsed requests awaiting a slot
+    queue_depth_peak: int = 0
+    poll_skips: int = 0          # polls skipped: admission was impossible
 
 
 class GenesysUdpServer:
@@ -100,8 +113,24 @@ class GenesysUdpServer:
         self._call(Sys.BIND, self.fd, port)
         sock = gsys.table._sockets[self.fd]
         sock.settimeout(0.2)
-        self.stats = ServeStats()
+        # trace.Counters fold: serving stats join Genesys.telemetry()
+        # ("serving"/"server") and stay torn-read-free for scrapers
+        self.counters = Counters(ServeStats())
+        gsys.attach_stats("server", self.counters)
+        # per-request wall-time histogram (µs) in the metrics registry —
+        # the windowed-p99 / SLO-burn input for the serving path
+        self._wall_hist = gsys.metrics.histogram(
+            "genesys_request_wall_us", "per-request serve wall time (µs)")
         self._pending_handles: list[int] = []
+
+    @property
+    def stats(self) -> ServeStats:
+        return self.counters.stats
+
+    @stats.setter
+    def stats(self, new) -> None:
+        with self.counters.lock:
+            self.counters.stats = new
 
     def poll_requests(self, idle_wait: float | None = None
                       ) -> list[np.ndarray]:
@@ -138,23 +167,42 @@ class GenesysUdpServer:
         return out
 
     def _maybe_stats(self, req: np.ndarray) -> bool:
-        """Handle a STATS control datagram: reply with the telemetry
-        snapshot as JSON to the embedded port. Returns True if ``req``
-        was a STATS op (and must not enter the request batch)."""
+        """Handle a STATS or METRICS control datagram: reply with the
+        telemetry JSON snapshot / Prometheus text to the embedded port.
+        Returns True if ``req`` was a control op (and must not enter the
+        request batch)."""
         data = req.tobytes()
-        if not data.startswith(STATS_MAGIC):
+        want_metrics = data.startswith(METRICS_MAGIC)
+        if not want_metrics and not data.startswith(STATS_MAGIC):
             return False
-        self.stats.stats_requests += 1
+        self.counters.add(stats_requests=1)
         if len(data) >= len(STATS_MAGIC) + 4:
             port = int.from_bytes(
                 data[len(STATS_MAGIC):len(STATS_MAGIC) + 4], "little")
             if port:
-                snap = self.gsys.telemetry()
-                blob = json.dumps(jsonable(snap)).encode()
-                if len(blob) > _STATS_MAX_DGRAM:   # huge histogram set:
-                    blob = json.dumps(summary_dict(snap)).encode()
-                self.reply([blob], port)
+                self.reply([self._metrics_blob() if want_metrics
+                            else self._stats_blob()], port)
         return True
+
+    def _stats_blob(self) -> bytes:
+        snap = self.gsys.telemetry()
+        blob = json.dumps(jsonable(snap)).encode()
+        if len(blob) > _STATS_MAX_DGRAM:   # huge histogram set: the
+            # summary fallback says so explicitly — the TCP /telemetry
+            # endpoint serves the full payload with no ceiling
+            s = summary_dict(snap)
+            s["truncated"] = True
+            blob = json.dumps(s).encode()
+        return blob
+
+    def _metrics_blob(self) -> bytes:
+        reg = self.gsys.metrics
+        reg.tick()
+        text = reg.prometheus_text().encode()
+        if len(text) > _STATS_MAX_DGRAM:
+            cut = text.rfind(b"\n", 0, _STATS_MAX_DGRAM - 16)
+            text = text[:max(0, cut)] + b"\n# truncated\n"
+        return text
 
     def reply(self, payloads: list[bytes], port: int) -> None:
         if self.use_ring:
@@ -200,12 +248,12 @@ class GenesysUdpServer:
             if not reqs:
                 continue
             self.reply([r.tobytes() for r in reqs], reply_port)
-            self.stats.requests += len(reqs)
-            self.stats.batches += 1
+            self.counters.add(requests=len(reqs), batches=1)
             done += 1
         self.gsys.drain()
         self._release_pending()
-        self.stats.wall_s = time.monotonic() - t0
+        wall = time.monotonic() - t0
+        self.counters.update(lambda s: setattr(s, "wall_s", wall))
         return self.stats
 
     def serve_model(self, serve_fn, params, cache, *, n_batches: int,
@@ -248,11 +296,19 @@ class GenesysUdpServer:
                     break               # traffic died before the target
                 continue
             idle = 0
+            tracer = self.gsys.tracer
+            ch = tracer.channel("requests") if tracer is not None else None
+            t_parse = time.perf_counter_ns()
             parsed = [parse_request(r, per_request_tokens, max_tokens)
                       for r in reqs]
             toks = [p[0] for p in parsed]
             budgets = [p[1] for p in parsed]
             tags = [p[2] for p in parsed]
+            spans = [0] * len(parsed)
+            if ch is not None:
+                spans = [tracer.next_seq() for _ in parsed]
+                for sp, b in zip(spans, budgets):
+                    ch.rec(EV_REQ_BEGIN, REQ_SYSNO, sp, aux=b, ts=t_parse)
             if batch_decode:
                 gens = _greedy_decode_batch(serve_fn, params, cache, toks,
                                             max_tokens, self.stats,
@@ -260,28 +316,44 @@ class GenesysUdpServer:
                                                      per_request_tokens
                                                      else None))
                 # the bucket's replies fan out through the tenant/ring
-                # send path as ONE multi-entry submission
+                # send path as ONE multi-entry submission (not attributable
+                # to a single request span, so no span context here)
                 self.reply([encode_reply(gn, tag)
                             for gn, tag in zip(gens, tags)], reply_port)
-                self.stats.tokens_out += sum(len(gn) for gn in gens)
+                self.counters.add(tokens_out=sum(len(gn) for gn in gens))
+                end = time.perf_counter_ns()
+                for sp, gn in zip(spans, gens):
+                    if sp:
+                        ch.rec(EV_REQ_END, REQ_SYSNO, sp, aux=len(gn),
+                               ts=end)
+                self._wall_hist.observe_block(
+                    [(end - t_parse) / 1e3] * len(parsed))
             else:
-                for t, n_i, tag in zip(toks, budgets, tags):
+                for t, n_i, tag, sp in zip(toks, budgets, tags, spans):
+                    t1 = time.perf_counter_ns()
                     gen = _greedy_decode(serve_fn, params, cache, cache_len,
                                          t, n_i)
                     # reply eagerly, per request: earlier requests in a
                     # batch are not held hostage by later ones' decode
                     # steps (the ring/tenant send is async, so this costs
                     # one SQE each)
-                    self.reply([encode_reply(gen, tag)], reply_port)
-                    self.stats.tokens_out += len(gen)
-                    self.stats.decode_dispatches += n_i
-                    self.stats.decode_steps += n_i
-            self.stats.requests += len(reqs)
-            self.stats.batches += 1
+                    if sp:
+                        with tracer.span(sp):
+                            self.reply([encode_reply(gen, tag)], reply_port)
+                        ch.rec(EV_REQ_END, REQ_SYSNO, sp, aux=len(gen))
+                    else:
+                        self.reply([encode_reply(gen, tag)], reply_port)
+                    self._wall_hist.observe(
+                        (time.perf_counter_ns() - t1) / 1e3)
+                    self.counters.add(tokens_out=len(gen),
+                                      decode_dispatches=n_i,
+                                      decode_steps=n_i)
+            self.counters.add(requests=len(reqs), batches=1)
             done += 1
         self.gsys.drain()
         self._release_pending()
-        self.stats.wall_s = time.monotonic() - t0
+        wall = time.monotonic() - t0
+        self.counters.update(lambda s: setattr(s, "wall_s", wall))
         return self.stats
 
     def serve_model_continuous(self, engine, *, reply_port: int,
@@ -305,10 +377,21 @@ class GenesysUdpServer:
         the socket's idle timeout. Stops once ``n_requests`` requests
         are answered (or after ``max_idle_polls`` idle polls with
         nothing in flight).
+
+        With tracing on, every request gets a **span id** at parse time:
+        REQ_BEGIN/REQ_END events bracket its wall time, the engine
+        records one EV_STEP per span per decode dispatch, and admission/
+        retirement/reply syscalls submitted under ``Tracer.span`` carry
+        the id in their SUBMIT aux — ``export_chrome_trace`` renders one
+        pid-5 track per request nesting its steps and syscalls.
         """
         t0 = time.monotonic()
-        engine.serve_stats = self.stats
-        queue: list[tuple[np.ndarray, int, int | None]] = []
+        engine.serve_stats = self.counters
+        tracer = self.gsys.tracer
+        ch = tracer.channel("requests") if tracer is not None else None
+        engine.trace = ch
+        # queue entries: (toks, budget, tag, span, t_parse_ns)
+        queue: list[tuple] = []
         idle = 0
         replied = 0
         while True:
@@ -317,14 +400,22 @@ class GenesysUdpServer:
                 break
             if busy and len(queue) >= engine.free_slots:
                 reqs = []           # nothing to admit into: don't block
+                self.counters.add(poll_skips=1)
             else:
                 reqs = self.poll_requests(idle_wait=0.001 if busy else None)
             if reqs:
                 idle = 0
-                self.stats.requests += len(reqs)
-                self.stats.batches += 1
-                queue.extend(parse_request(r, per_request_tokens, max_tokens)
-                             for r in reqs)
+                self.counters.add(requests=len(reqs), batches=1)
+                now_ns = time.perf_counter_ns()
+                for r in reqs:
+                    toks, budget, tag = parse_request(
+                        r, per_request_tokens, max_tokens)
+                    span = 0
+                    if ch is not None:
+                        span = tracer.next_seq()
+                        ch.rec(EV_REQ_BEGIN, REQ_SYSNO, span, aux=budget,
+                               ts=now_ns)
+                    queue.append((toks, budget, tag, span, now_ns))
             elif not busy:
                 idle += 1
                 if n_requests is None or idle >= max_idle_polls:
@@ -332,16 +423,41 @@ class GenesysUdpServer:
                 continue
             # admit as many queued requests as slots/blocks allow — the
             # rest stay queued and retry after the next retirements
-            while queue and engine.admit(queue[0][0], queue[0][1],
-                                         meta=queue[0][2]):
+            while queue:
+                toks, budget, tag, span, tns = queue[0]
+                meta = (tag, span, tns)
+                if span:
+                    # admission syscalls (spill revivals, block touches)
+                    # belong to this request's span
+                    with tracer.span(span):
+                        ok = engine.admit(toks, budget, meta=meta,
+                                          span=span)
+                else:
+                    ok = engine.admit(toks, budget, meta=meta, span=span)
+                if not ok:
+                    break
                 queue.pop(0)
-            for tag, gen in engine.step():
-                self.reply([encode_reply(gen, tag)], reply_port)
-                self.stats.tokens_out += len(gen)
+            depth = len(queue)
+            self.counters.update(lambda s: (
+                setattr(s, "queue_depth", depth),
+                setattr(s, "queue_depth_peak",
+                        max(s.queue_depth_peak, depth))))
+            for meta, gen in engine.step():
+                tag, span, tns = meta
+                if span:
+                    with tracer.span(span):
+                        self.reply([encode_reply(gen, tag)], reply_port)
+                    ch.rec(EV_REQ_END, REQ_SYSNO, span, aux=len(gen))
+                else:
+                    self.reply([encode_reply(gen, tag)], reply_port)
+                self._wall_hist.observe(
+                    (time.perf_counter_ns() - tns) / 1e3)
+                self.counters.add(tokens_out=len(gen))
                 replied += 1
         self.gsys.drain()
         self._release_pending()
-        self.stats.wall_s = time.monotonic() - t0
+        wall = time.monotonic() - t0
+        self.counters.update(lambda s: setattr(s, "wall_s", wall))
         return self.stats
 
     def close(self) -> None:

@@ -17,8 +17,16 @@ Three measurements:
   * **mmap batching / dedup** — reported (not gated): same-size-class
     MMAP bundles through ``MemoryPool.mmap_many`` vs per-call, and the
     dedup count for identical concurrent reads.
+  * **fuse-aware WFQ costing** — a fused tenant and a plain tenant
+    submit identical adjacent-pread workloads through the PollerGroup
+    with WeightedFair installed. The fused ring's ``qos_entries()``
+    collapses each merged group to ONE charged entry, so the fused
+    tenant's ``charged`` ledger must carry well under the plain
+    tenant's for equal work — i.e. QoS charges kernel crossings, not
+    submitted calls, and fusing stops costing tenants scheduling
+    bandwidth they never consumed. Gate: charge ratio <= 0.6.
 
-Both gated comparisons run interleaved and judge the median of per-repeat
+The timed comparisons run interleaved and judge the median of per-repeat
 ratios (same noise discipline as fig8/fig9).
 
 Output CSV: name,us_per_call,derived.
@@ -38,7 +46,8 @@ if __package__ in (None, ""):           # `python benchmarks/fig10_fuse.py`
 
 import numpy as np                                                  # noqa: E402
 
-from repro.core.genesys import Genesys, GenesysConfig, Sys, SyscallRing  # noqa: E402
+from repro.core.genesys import (Genesys, GenesysConfig, Sys,        # noqa: E402
+                                SyscallRing, WeightedFair)
 from repro.core.genesys.area import SyscallArea                     # noqa: E402
 from benchmarks.common import (emit, make_file, make_gsys, open_ro,  # noqa: E402
                                trimmed_mean)
@@ -226,6 +235,45 @@ def _sq_pushpop(batches, repeats, ratios, rounds: int) -> None:
         emit(f"fig10/{key}_speedup", ratios[key], "x_vector_over_loop_median")
 
 
+# ----------------------------------------------- fuse-aware WFQ costing ------
+
+def _wfq_fuse_costing(batch: int, rounds: int, ratios) -> None:
+    """Equal pread work through two tenants — one fused, one plain — and
+    compare what WeightedFair actually charged each scheduling node."""
+    g = make_gsys(n_workers=2, sched_pollers=1, sched_inline=True,
+                  tenant_slots=1024, tenant_sq_depth=1024)
+    wf = WeightedFair()
+    g.use_policies(wf)
+    try:
+        path = make_file(batch * READ_BYTES + (1 << 16))
+        fd = open_ro(g, path)
+        fused = g.tenant("fused", fuse=True)
+        plain = g.tenant("plain")
+        for t in (fused, plain):
+            bh = g.heap.new_buffer(batch * READ_BYTES)
+            calls = _pread_calls(fd, bh, batch)
+            window: deque = deque()
+            for _ in range(rounds):     # keep the SQ deep: full bundles pop
+                window.append(t.submit(calls))
+                if len(window) > WINDOW_BATCHES:
+                    for c in window.popleft():
+                        assert c.result(timeout=10) == READ_BYTES
+            while window:
+                for c in window.popleft():
+                    assert c.result(timeout=10) == READ_BYTES
+        fc = wf.charged["fused"][int(Sys.PREAD64)]
+        pc = wf.charged["plain"][int(Sys.PREAD64)]
+        ratios["wfq_fuse_charge"] = fc / pc
+        emit("fig10/wfq_charged_fused", fc, f"{rounds * batch}_preads")
+        emit("fig10/wfq_charged_plain", pc, f"{rounds * batch}_preads")
+        emit("fig10/wfq_fuse_charge_ratio", ratios["wfq_fuse_charge"],
+             "x_fused_over_plain_charge")
+        g.call(Sys.CLOSE, fd)
+        os.unlink(path)
+    finally:
+        g.shutdown()
+
+
 # -------------------------------------------------- mmap batching + dedup ----
 
 def _mmap_and_dedup(batch: int) -> None:
@@ -262,6 +310,7 @@ def run(quick: bool = False) -> dict[str, float]:
         _fused_pread(batches, repeats, ratios)
         _sq_pushpop((256,) if quick else (64, 256), repeats, ratios,
                     rounds=200 if quick else 400)
+        _wfq_fuse_costing(64, 8 if quick else 16, ratios)
         _mmap_and_dedup(32)
     finally:
         sys.setswitchinterval(old_switch)
@@ -293,6 +342,12 @@ def main(argv=None) -> int:
     if sq < 1.5:
         print(f"# FAIL: vectorized SQ push/pop = {sq:.2f}x loop at batch "
               f"256 (< 1.5x)", flush=True)
+        ok = False
+    wc = ratios.get("wfq_fuse_charge", 1.0)
+    if wc > 0.6:
+        print(f"# FAIL: fused tenant charged {wc:.2f}x the plain tenant "
+              f"(> 0.6x) — WFQ is costing calls, not kernel crossings",
+              flush=True)
         ok = False
     if ok:
         gated = {k: round(v, 2) for k, v in ratios.items()}

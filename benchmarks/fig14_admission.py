@@ -1,0 +1,313 @@
+"""Fig 14 (repo extension): SLO-driven admission control under overload,
+plus deterministic fault-injection reproducibility.
+
+Part A — degradation curve. 1024 logical clients hash into 4 admission
+groups: ``gold`` (protected: declared SLO, priority_class 0) plus
+``bulk1``/``bulk2``/``bulk3`` (unprotected, shedding rank 1..3). Each
+group's requests ride one tenant ring of blocking WORK calls (a sleeping
+handler, GIL released — same stand-in as fig9) reaped by a single inline
+poller, with the bulk groups together offering ~2x the poller's service
+capacity. No WFQ/priority policies are installed: isolation must come
+from the AdmissionController alone, i.e. from shedding offered load
+until the protected group's windowed p99 stops burning its SLO budget.
+Two scenarios:
+
+  * ``admit off`` — every request executes. Bulk backlog saturates the
+    rings and gold probes wait behind whole inline flood bundles, so the
+    protected p99 blows its SLO (the collapse admission control exists
+    to prevent).
+  * ``admit on``  — every request first passes
+    ``AdmissionController.admit_request``; gold probe walls feed
+    ``observe()``. The AIMD shed level rises on burn, bulk groups shed
+    proportionally to rank (deterministic duty-cycle thinning), and the
+    protected p99 must land back under the SLO.
+
+Gates: admit-on gold p99 <= SLO; admit-off gold p99 > SLO (both soft on
+<2-CPU hosts — they are wall-clock latency gates); shed fractions
+monotone in rank with rank-3 shedding meaningfully and gold never shed.
+
+Part B — replayable faults. A seeded FaultPlan (EINTR at 30% on ECHO)
+is driven twice by the identical sequential schedule (3 tenants on a
+2-poller group; one in-flight call per (tenant, sysno) key, so per-key
+call indices are interleaving-free). Gate: both runs inject the
+bit-identical schedule — equal ``digest()`` and injected count — making
+overload/fault drills replayable in CI.
+
+Output CSV: name,value,derived. ``--out PATH`` writes a JSON summary of
+every gated number (the CI artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+
+if __package__ in (None, ""):       # `python benchmarks/fig14_admission.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from repro.core.genesys import (AdmissionController, FaultPlan, Genesys,  # noqa: E402
+                                GenesysConfig, RingFull, Sys)
+from benchmarks.common import emit                                        # noqa: E402
+
+WORK_SYS = 902              # sleeps args[0] microseconds, releasing the GIL
+WORK_US = 300               # nominal; the kernel-timer floor is ~1ms, which
+                            # is what makes inline flood bundles hurt
+GOLD_SLO_US = 20_000.0      # protected group's declared + gated p99 SLO
+N_CLIENTS = 1024            # logical clients hashed into the 4 groups
+FLOOD_BATCH = 24            # bulk requests offered per pacing quantum
+FLOOD_RATE = 600.0          # offered calls/s PER bulk group (~2x capacity
+                            # in aggregate against one inline poller)
+PROBE_GAP_S = 0.003         # pacing between gold probes
+EPS = 0.02                  # tolerance on the monotone shed-fraction gate
+
+
+def _register_work(g: Genesys) -> None:
+    def _work(us, *_):
+        time.sleep(us / 1e6)
+        return us
+    g.table.register(WORK_SYS, _work)
+
+
+def _group_of(cid) -> str:
+    cid = int(cid)
+    if cid % 8 == 0:
+        return "gold"
+    return f"bulk{1 + cid % 3}"
+
+
+def _overload_scenario(*, admit: bool, warmup_s: float, measure_s: float
+                       ) -> dict:
+    """Run the flood + gold probes; returns gold wall percentiles and —
+    with admission on — the per-rank shed fractions and final level."""
+    g = Genesys(GenesysConfig(
+        n_workers=2, sched_pollers=1, sched_inline=True,
+        tenant_slots=1024, tenant_sq_depth=256))
+    _register_work(g)
+    stop = threading.Event()
+    flooders: list[threading.Thread] = []
+    try:
+        controller = None
+        if admit:
+            controller = AdmissionController(g.metrics, span=4)
+            controller.declare("gold", slo_us=GOLD_SLO_US, priority_class=0)
+            for rank in (1, 2, 3):
+                controller.declare(f"bulk{rank}", priority_class=rank)
+            controller.map_default(_group_of)
+        gold_t = g.tenant("t_gold")
+        bulk_ts = {r: g.tenant(f"t_bulk{r}") for r in (1, 2, 3)}
+
+        def _flood_loop(rank: int) -> None:
+            t = bulk_ts[rank]
+            cids = [c for c in range(N_CLIENTS)
+                    if c % 8 and 1 + c % 3 == rank]
+            idx = 0
+            next_t = time.monotonic()
+            while not stop.is_set():
+                kept = 0
+                for _ in range(FLOOD_BATCH):
+                    cid = cids[idx % len(cids)]
+                    idx += 1
+                    if (controller is not None
+                            and controller.admit_request(cid) == "shed"):
+                        continue
+                    kept += 1
+                if kept:
+                    try:
+                        t.submit([(WORK_SYS, WORK_US)] * kept,
+                                 sq_full="raise")
+                    except RingFull:
+                        pass            # ring jammed: the offer is dropped
+                next_t += FLOOD_BATCH / FLOOD_RATE
+                delay = next_t - time.monotonic()
+                if delay > 0:
+                    time.sleep(delay)
+                else:                   # fell behind: re-anchor the pacing
+                    next_t = time.monotonic()
+
+        for rank in (1, 2, 3):
+            th = threading.Thread(target=_flood_loop, args=(rank,),
+                                  daemon=True)
+            th.start()
+            flooders.append(th)
+
+        gold_cids = [c for c in range(N_CLIENTS) if c % 8 == 0]
+        samples: list[float] = []
+        idx = 0
+        t_start = time.monotonic()
+        deadline = t_start + warmup_s + measure_s
+        while time.monotonic() < deadline:
+            cid = gold_cids[idx % len(gold_cids)]
+            idx += 1
+            if controller is not None:
+                controller.admit_request(cid)   # rank 0: admit or degrade
+            t0 = time.perf_counter()
+            gold_t.call(WORK_SYS, WORK_US, timeout=60)
+            wall = time.perf_counter() - t0
+            if controller is not None:
+                controller.observe(cid, wall * 1e6)
+            if time.monotonic() - t_start >= warmup_s:
+                samples.append(wall)
+            time.sleep(PROBE_GAP_S)
+
+        samples.sort()
+        out = {
+            "n": len(samples),
+            "p50_us": samples[len(samples) // 2] * 1e6,
+            "p99_us": samples[min(len(samples) - 1,
+                                  int(len(samples) * 0.99))] * 1e6,
+        }
+        if controller is not None:
+            snap = controller.counters.snapshot()
+            fracs = {}
+            for name, c in snap["per_group"].items():
+                total = c["admitted"] + c["degraded"] + c["shed"]
+                fracs[name] = c["shed"] / max(1, total)
+            out["shed_fracs"] = fracs
+            out["level"] = snap["shed_level"]
+            out["gold_shed"] = snap["per_group"].get(
+                "gold", {"shed": 0})["shed"]
+        return out
+    finally:
+        stop.set()
+        for th in flooders:
+            th.join(timeout=5)
+        g.shutdown()
+
+
+def _fault_replay(n_calls: int) -> tuple[bytes, int]:
+    """One deterministic fault-drill run: sequential ECHO schedule over 3
+    tenants with a seeded 30% EINTR plan; returns (hex digest, injected
+    count)."""
+    g = Genesys(GenesysConfig(n_workers=2, sched_pollers=2))
+    try:
+        plan = g.use_fault_plan(FaultPlan(seed=1405).inject(
+            sysno=int(Sys.ECHO), errnos=(4,), rate=0.3))   # EINTR
+        tenants = [g.tenant(f"f{i}") for i in range(3)]
+        for k in range(n_calls):
+            for t in tenants:
+                r = t.call(Sys.ECHO, k, timeout=30)
+                assert r == k or r == -4, (t.name, k, r)
+        return plan.digest(), plan.injected
+    finally:
+        g.shutdown()
+
+
+def run(quick: bool = False) -> dict:
+    warmup_s, measure_s = (0.8, 1.6) if quick else (1.5, 4.0)
+    replay_calls = 80 if quick else 200
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)   # as fig9: don't let the GIL quantum
+    try:                            # dwarf the latencies under test
+        return _run(warmup_s, measure_s, replay_calls)
+    finally:
+        sys.setswitchinterval(old_switch)
+
+
+def _run(warmup_s: float, measure_s: float, replay_calls: int) -> dict:
+    out: dict = {}
+
+    # -- part A: degradation curve -------------------------------------------
+    on = _overload_scenario(admit=True, warmup_s=warmup_s,
+                            measure_s=measure_s)
+    off = _overload_scenario(admit=False, warmup_s=warmup_s,
+                             measure_s=measure_s)
+    out["gold_slo_us"] = GOLD_SLO_US
+    out["on_p99_us"] = on["p99_us"]
+    out["off_p99_us"] = off["p99_us"]
+    out["shed_fracs"] = on["shed_fracs"]
+    out["shed_level"] = on["level"]
+    out["gold_shed"] = on["gold_shed"]
+    emit("fig14/gold_p99_admit_on", on["p99_us"],
+         f"{on['p99_us'] / GOLD_SLO_US:.2f}x_slo_n{on['n']}")
+    emit("fig14/gold_p99_admit_off", off["p99_us"],
+         f"{off['p99_us'] / GOLD_SLO_US:.2f}x_slo_n{off['n']}")
+    emit("fig14/gold_p50_admit_on", on["p50_us"], "us")
+    for rank in (1, 2, 3):
+        emit(f"fig14/shed_frac_rank{rank}",
+             100.0 * on["shed_fracs"].get(f"bulk{rank}", 0.0),
+             "pct_of_offered")
+    emit("fig14/shed_level", 100.0 * on["level"], "pct_final")
+
+    # -- part B: replayable fault drill --------------------------------------
+    t0 = time.monotonic()
+    d1, i1 = _fault_replay(replay_calls)
+    d2, i2 = _fault_replay(replay_calls)
+    dt = time.monotonic() - t0
+    out["fault_injected"] = [i1, i2]
+    out["fault_digest_match"] = bool(d1 == d2)
+    out["fault_digest"] = str(d1)
+    emit("fig14/fault_replay_injected", float(i1),
+         f"digest_{'match' if d1 == d2 else 'MISMATCH'}_{str(d1)[:12]}")
+    emit("fig14/fault_replay_runtime", dt * 1e6 / max(1, 2 * i1),
+         f"{dt:.2f}s_2_runs")
+    return out
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    quick = "--quick" in argv
+    out_path = (argv[argv.index("--out") + 1]
+                if "--out" in argv else None)
+    t0 = time.monotonic()
+    out = run(quick=quick)
+    print(f"# fig14 done in {time.monotonic() - t0:.1f}s", flush=True)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"# summary written to {out_path}", flush=True)
+
+    ok = True
+    soft = (os.cpu_count() or 1) < 2
+    fr = out["shed_fracs"]
+    f1, f2, f3 = (fr.get(f"bulk{r}", 0.0) for r in (1, 2, 3))
+
+    def _latency_gate(cond: bool, msg: str) -> bool:
+        if cond:
+            return True
+        if soft:
+            print(f"# WARN (soft, <2 CPUs): {msg}", flush=True)
+            return True
+        print(f"# FAIL: {msg}", flush=True)
+        return False
+
+    ok &= _latency_gate(
+        out["on_p99_us"] <= GOLD_SLO_US,
+        f"admission on: protected p99 {out['on_p99_us']:.0f}us > "
+        f"SLO {GOLD_SLO_US:.0f}us")
+    ok &= _latency_gate(
+        out["off_p99_us"] > GOLD_SLO_US,
+        f"admission off: protected p99 {out['off_p99_us']:.0f}us did not "
+        f"blow the SLO (flood too weak to gate against)")
+    if not (f1 <= f2 + EPS and f2 <= f3 + EPS):
+        print(f"# FAIL: shed fractions not monotone in rank: "
+              f"{f1:.2f} / {f2:.2f} / {f3:.2f}", flush=True)
+        ok = False
+    if f3 < 0.1:
+        print(f"# FAIL: rank-3 shed fraction {f3:.2f} < 0.10 — the "
+              f"controller never engaged", flush=True)
+        ok = False
+    if out["gold_shed"] != 0:
+        print(f"# FAIL: protected group was shed "
+              f"{out['gold_shed']} times", flush=True)
+        ok = False
+    if not out["fault_digest_match"] or out["fault_injected"][0] == 0:
+        print(f"# FAIL: fault drill not reproducible: injected="
+              f"{out['fault_injected']} match="
+              f"{out['fault_digest_match']}", flush=True)
+        ok = False
+    if ok:
+        print(f"# admission gate OK: on p99 "
+              f"{out['on_p99_us'] / GOLD_SLO_US:.2f}x SLO, off "
+              f"{out['off_p99_us'] / GOLD_SLO_US:.2f}x, shed "
+              f"{f1:.2f}/{f2:.2f}/{f3:.2f} by rank, fault digest "
+              f"{out['fault_digest'][:12]} x2", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

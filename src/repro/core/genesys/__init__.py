@@ -101,6 +101,36 @@ allocates a span id per request, syscalls submitted under
 records per-span decode steps, and ``export_chrome_trace`` renders one
 pid-5 track per request nesting its steps and syscalls.
 
+Admission & degradation (``admit.py``): the layer that acts on the SLO
+signals the two paragraphs above only *measure*. An
+:class:`~repro.core.genesys.admit.AdmissionController` is a
+:class:`~repro.core.genesys.sched.Policy` (install with
+``controller.install(gsys)``) plus a request-classification front end
+for the serving loop. Tenants declare **SLO classes**
+(:class:`~repro.core.genesys.admit.GroupSpec`: ``slo_us`` / ``target`` /
+``priority_class``); the controller registers each as a labeled SLO on
+the metrics registry and, on a rate-limited ``refresh()``, reads back
+the windowed burn-rate gauges and span-windowed p99 quantiles — never a
+raw unwindowed snapshot — to drive one AIMD **shed level**. Priority
+classes shed proportionally to rank (protected rank-0 classes are never
+shed, only transparently *degraded* — halved token budgets, a small
+submit-time delay), and shed requests get an immediate ``SHED_TOKEN``
+reply instead of a queue slot, so overload degrades the curve instead
+of collapsing it. Cgroup-style **hierarchical groups**
+(``Genesys.tenant(name, group=...)``) make N connections from one
+customer a single WFQ scheduling node with one burn budget; a
+per-tenant **reap-credit ledger** (``SyscallRing.reap_credit``) bounds
+how far a slow reaper's completions can outrun its reaping before the
+PollerGroup parks that ring (``credit_stalls``) — backpressure instead
+of CQ backlog growth. Finally, a deterministic **fault-injection**
+plane (:class:`~repro.core.genesys.admit.FaultPlan`, installed via
+``Genesys.use_fault_plan``) injects seeded per-(tenant, sysno) errno
+schedules at the executor's single dispatch funnel, where transient
+errnos (EAGAIN / EINTR) are retried with bounded exponential backoff
+(:class:`~repro.core.genesys.executor.RetryPolicy`); the plan's
+``digest()`` is bit-reproducible across runs for a fixed seed, making
+overload/fault drills replayable in CI.
+
 Serving (``repro.serving``): the paper's echo server grown into a model
 server whose data plane is genesys syscalls end to end. Network I/O is
 RECVFROM/SENDTO on tenant rings; the KV cache is a **paged pool**
@@ -118,11 +148,14 @@ shape jitted once, admissions and retirements mid-decode by mutating
 block-table rows only, and a split-KV flash-decode kernel
 (``kernels/decode_attention.py``) that walks the block table directly.
 """
+from repro.core.genesys.admit import (
+    AdmissionController, AdmitShed, AdmitStats, FaultPlan, GroupSpec,
+)
 from repro.core.genesys.area import (
     SyscallArea, SlotState, SLOT_DTYPE, SLOT_BYTES,
 )
 from repro.core.genesys.completion import Completion, CompletionQueue
-from repro.core.genesys.executor import Executor, ExecutorStats
+from repro.core.genesys.executor import Executor, ExecutorStats, RetryPolicy
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.syscalls import Sys, SyscallTable, make_default_table
@@ -148,9 +181,11 @@ from repro.core.genesys.invoke import (
 from repro.core.genesys import table
 
 __all__ = [
+    "AdmissionController", "AdmitShed", "AdmitStats", "FaultPlan",
+    "GroupSpec",
     "SyscallArea", "SlotState", "SLOT_DTYPE", "SLOT_BYTES",
     "Completion", "CompletionQueue",
-    "Executor", "ExecutorStats", "HostHeap", "MemoryPool",
+    "Executor", "ExecutorStats", "RetryPolicy", "HostHeap", "MemoryPool",
     "Sys", "SyscallTable", "make_default_table",
     "RingFull", "RingPoller", "RingStats", "SyscallRing",
     "Coalescer", "FuseStats",

@@ -31,6 +31,26 @@ from repro.core.genesys.syscalls import SyscallTable
 from repro.core.genesys.trace import (Counters, EV_COMPLETE, EV_DISPATCH,
                                       EV_IRQ)
 
+# errno values shared by the retry/fault-injection machinery (admit.py,
+# uring.py): handlers return -errno, so transient-vs-fatal classification
+# happens on the negated dispatch result
+EIO, EINTR, EAGAIN = 5, 4, 11
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for *transient* dispatch errnos.
+
+    A handler returning -EAGAIN/-EINTR is retried in place (same worker,
+    same slot) up to ``max_retries`` times with exponential backoff
+    starting at ``backoff_us``; anything else — including -EIO and
+    handler exceptions — surfaces to the caller on the first attempt.
+    Note socket-timeout polls map to -EIO (errno None), so idle recvfrom
+    loops never enter the retry path."""
+    max_retries: int = 3
+    backoff_us: float = 50.0
+    transient: frozenset = frozenset({EAGAIN, EINTR})
+
 
 @dataclass
 class ExecutorStats:
@@ -39,6 +59,9 @@ class ExecutorStats:
     ring_bundles: int = 0
     processed: int = 0
     ring_processed: int = 0
+    injected_faults: int = 0
+    retries: int = 0
+    retries_exhausted: int = 0
     coalesce_hist: dict = field(default_factory=dict)
     busy_s: float = 0.0
 
@@ -64,6 +87,11 @@ class Executor:
         self.stats = self.counters.stats
         # doorbell-path trace channel (a trace.TraceChannel); None = off
         self.trace = None
+        # deterministic fault injection (an admit.FaultPlan); None = off.
+        # Every dispatch — ring, fused, and doorbell-fallback — funnels
+        # through dispatch_call(), so one plan covers all three paths.
+        self.fault_plan = None
+        self.retry = RetryPolicy()
         self._doorbell: queue.Queue = queue.Queue()
         self._bundles: queue.Queue = queue.Queue()
         self._stop = threading.Event()
@@ -192,6 +220,38 @@ class Executor:
             dt = time.monotonic() - t0
             self.counters.add(busy_s=dt)
 
+    def dispatch_call(self, sysno: int, args, owner=None) -> int:
+        """The one dispatch funnel: fault injection, then the table, then
+        bounded retry-with-backoff for transient errnos. ``owner`` is the
+        tenant name the call was submitted under (None for the global
+        ring/doorbell) — fault plans key their schedules on it. Both the
+        ring batch paths and the doorbell fallback call this, so a
+        transient -EAGAIN on *any* path consumes the same retry budget
+        instead of surfacing straight to the caller."""
+        sysno = int(sysno)
+        plan, rp = self.fault_plan, self.retry
+        attempt = 0
+        while True:
+            inj = plan.check(owner, sysno) if plan is not None else 0
+            if inj:
+                self.counters.add(injected_faults=1)
+                ret = -inj
+            else:
+                try:
+                    ret = self.table.dispatch(sysno, args)
+                except Exception:        # non-OSError handler failure: the
+                    ret = -5             # caller sees -EIO, the worker
+                    return ret           # thread stays healthy; never retry
+            if ret < 0 and -ret in rp.transient:
+                if attempt < rp.max_retries:
+                    attempt += 1
+                    self.counters.add(retries=1)
+                    if rp.backoff_us > 0:
+                        time.sleep(rp.backoff_us * (1 << (attempt - 1)) / 1e6)
+                    continue
+                self.counters.add(retries_exhausted=1)
+            return ret
+
     def _process(self, slot: int, on_complete=None, area=None,
                  tseq: int = 0) -> None:
         area = self.area if area is None else area
@@ -203,11 +263,9 @@ class Executor:
             sysno = int(rec["sysno"])
             if tr is not None and tseq:
                 tr.rec(EV_DISPATCH, sysno, tseq, aux=tr.thread_aux())
-            try:
-                ret = self.table.dispatch(sysno, rec["args"])
-            except Exception:            # non-OSError handler failure: the
-                ret = -5                 # caller sees -EIO, the slot and
-            area.complete(slot, ret)        # worker thread stay healthy
+            ret = self.dispatch_call(sysno, rec["args"],
+                                     getattr(area, "owner", None))
+            area.complete(slot, ret)
             # counters before on_complete: on_complete pushes the CQE, so
             # a snapshot can never observe more reaped than processed
             if on_complete is not None:

@@ -256,6 +256,19 @@ class _FusedBatch:
     def __len__(self) -> int:
         return len(self.entries)
 
+    def qos_entries(self):
+        """The scheduler-chargeable view: one entry per actual kernel
+        crossing. Each merged read/mmap group charges its FIRST member's
+        entry once (the whole group is one dispatch); passthrough members
+        charge individually — so WFQ bills fused tenants for crossings,
+        not for member counts."""
+        charged = [self.entries[i] for i in self.passthrough]
+        for _fd, _lo, _hi, members in self.read_groups:
+            charged.append(self.entries[members[0].idx])
+        for _cls, idxs in self.mmap_groups:
+            charged.append(self.entries[idxs[0]])
+        return charged
+
     def process(self, ex) -> None:
         ring = self.ring
         area, table = ring.area, ex.table
@@ -280,14 +293,14 @@ class _FusedBatch:
                              aux=tr.thread_aux(), own=True)
             area.claim_many(slots)
             recs = area.slots
+            owner = ring.owner
             for i in self.passthrough:
                 rec = recs[slots[i]]
-                try:
-                    rets[i] = table.dispatch(rec["sysno"], rec["args"])
-                except Exception:       # same -EIO net as the unfused path
-                    rets[i] = -5
+                # the executor's dispatch funnel: fault injection + bounded
+                # retry; exceptions net to -EIO inside, like the unfused path
+                rets[i] = ex.dispatch_call(rec["sysno"], rec["args"], owner)
             for fd, lo, hi, members in self.read_groups:
-                self._run_read_group(table, fd, lo, hi, members, rets)
+                self._run_read_group(ex, fd, lo, hi, members, rets)
             for cls, idxs in self.mmap_groups:
                 self._run_mmap_group(table, cls, idxs, rets)
             area.complete_many(slots, rets)
@@ -306,23 +319,29 @@ class _FusedBatch:
                     ex._idle.notify_all()
 
     # -- fused executors ---------------------------------------------------------
-    def _run_read_group(self, table, fd, lo, hi, members, rets) -> None:
+    def _run_read_group(self, ex, fd, lo, hi, members, rets) -> None:
         """One merged pread for the whole ``[lo, hi)`` run, scattered back.
 
-        The merged read goes through the normal syscall table (scratch
-        heap buffer), so errno mapping, handler overrides, and dispatch
-        stats stay uniform — the bundle just crosses the "kernel" once.
+        The merged read goes through the executor's dispatch funnel
+        (scratch heap buffer), so errno mapping, handler overrides, fault
+        injection, bounded retry, and dispatch stats stay uniform — the
+        bundle just crosses the "kernel" once, and that one crossing is
+        what a fault plan can hit (the whole group shares its fate, like
+        a real merged request).
         """
+        table = ex.table
         heap = table.heap
         total = hi - lo
         scratch = np.empty(total, dtype=np.uint8)   # scatter clamps to nread
         sh = heap.register(scratch)
         try:
-            nread = table.dispatch(
-                int(Sys.PREAD64), [fd, sh, total, lo, 0, 0])
-        except Exception:       # non-OSError (e.g. OverflowError on an
-            nread = -5          # out-of-C-range offset): same -EIO net as
-        finally:                # the unfused per-call dispatch wrapper
+            # dispatch_call nets non-OSError failures (e.g. OverflowError
+            # on an out-of-C-range offset) to -EIO, same as the unfused
+            # per-call dispatch wrapper
+            nread = ex.dispatch_call(int(Sys.PREAD64),
+                                     [fd, sh, total, lo, 0, 0],
+                                     self.ring.owner)
+        finally:
             heap.release(sh)
         if nread < 0:                       # merged error: every member
             for m in members:               # sees what its own call would

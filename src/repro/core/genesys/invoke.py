@@ -392,12 +392,22 @@ class Genesys:
             self.engine.add(p)
         return self.engine
 
+    def use_fault_plan(self, plan):
+        """Arm deterministic fault injection (an
+        :class:`~repro.core.genesys.admit.FaultPlan`, or ``None`` to
+        disarm): every dispatch — ring batches, fused groups, doorbell
+        fallbacks — consults the plan inside the executor's one dispatch
+        funnel. Returns the plan for chaining."""
+        self.executor.fault_plan = plan
+        return plan
+
     def tenant(self, name: str, *, weight: float = 1.0, priority: int = 0,
                rate_limit: float | None = None, burst: float | None = None,
                n_slots: int | None = None, sq_depth: int | None = None,
                batch_max: int | None = None, fuse: bool = False,
                deadline_us: float | None = None,
                coalesce_max: int | None = None,
+               group: str | None = None,
                trace: bool = False) -> Tenant:
         """Get or create the named tenant: a private SyscallRing over a
         carved partition of the slot area, registered with the shared
@@ -409,9 +419,12 @@ class Genesys:
         preads, deduped reads, batched mmaps). ``deadline_us`` is the
         EDF knob the :class:`~repro.core.genesys.sched.Deadline` policy
         reads; ``coalesce_max`` bounds interrupt coalescing for this
-        tenant's doorbell-fallback calls; ``trace=True`` turns lifecycle
-        tracing on for this tenant's ring (creating the shared tracer on
-        first use even when ``GenesysConfig.trace`` is off)."""
+        tenant's doorbell-fallback calls; ``group`` names the cgroup-style
+        admission/WFQ group the tenant belongs to (tenants sharing a
+        group are ONE scheduling entity — see genesys.admit);
+        ``trace=True`` turns lifecycle tracing on for this tenant's ring
+        (creating the shared tracer on first use even when
+        ``GenesysConfig.trace`` is off)."""
         c = self.config
         with self._lock:
             t = self._tenants.get(name)
@@ -422,6 +435,9 @@ class Genesys:
                 from repro.core.genesys.fuse import Coalescer
                 ring_fuse = Coalescer(max_span=c.fuse_max_span)
             part = self.area.carve(n_slots or c.tenant_slots)
+            # fault plans attribute doorbell-fallback dispatches by the
+            # slot partition's owner (executor._process reads it back)
+            part.owner = str(name)
             # (fallback_coalesce_max is set by Tenant.__init__ from its
             # coalesce_max knob — one mechanism, also covering Tenants
             # constructed directly around an existing ring)
@@ -435,7 +451,8 @@ class Genesys:
                 ring.trace = self._tracer_locked().channel(name)
             t = Tenant(name, ring, weight=weight, priority=priority,
                        rate_limit=rate_limit, burst=burst, engine=self.engine,
-                       deadline_us=deadline_us, coalesce_max=coalesce_max)
+                       deadline_us=deadline_us, coalesce_max=coalesce_max,
+                       group=group)
             self._sched_locked().add(ring, tenant=t)
             self._tenants[name] = t
             return t

@@ -167,7 +167,10 @@ class MetricsRegistry:
         self._wn = 0                      # ticks so far (monotone)
         self._help: dict[str, str] = {}
         self._collectors: list = []
-        self._slos: dict[str, tuple[float, float, int]] = {}
+        # SLO declarations keyed (histogram name, labels_key): labeled
+        # declarations bind one series; a label-less declaration is the
+        # catch-all for every series of that name without its own entry
+        self._slos: dict[tuple[str, tuple], tuple[float, float, int]] = {}
 
     # ------------------------------------------------- series management ----
     def _series(self, name: str, labels: dict, kind: int,
@@ -374,29 +377,33 @@ class MetricsRegistry:
 
     # ---------------------------------------------------------- SLO burn ----
     def set_slo(self, name: str, slo_us: float, *, target: float = 0.999,
-                window: int = 12) -> None:
+                window: int = 12, **labels) -> None:
         """Declare a latency SLO over histogram ``name``: ``target``
         fraction of observations must land <= ``slo_us``. Every tick
         derives a ``genesys_slo_burn_rate{slo=name, ...}`` gauge per
-        matching series over the last ``window`` window intervals."""
+        matching series over the last ``window`` window intervals.
+        With ``**labels`` the SLO binds only the exactly-matching series
+        (the per-tenant-group idiom admission control uses); a label-less
+        declaration remains the catch-all for every series of the name
+        that has no labeled declaration of its own."""
         if not (0.0 < target < 1.0):
             raise ValueError("target must be in (0, 1)")
         with self._lock:
-            self._slos[name] = (float(slo_us), float(target), int(window))
+            self._slos[(name, _labels_key(labels))] = (
+                float(slo_us), float(target), int(window))
 
     def _burn_rates_list(self) -> list[tuple[str, tuple, float]]:
         out: list[tuple[str, tuple, float]] = []
         with self._lock:
             slos = dict(self._slos)
-            series = [(i, name, labels)
-                      for i, (name, labels) in enumerate(self._hmeta)
-                      if name in slos]
-            deltas = {}
-            for i, name, labels in series:
-                _, _, window = slos[name]
-                deltas[i] = self._hdelta_locked(i, window)
-        for i, name, labels in series:
-            slo_us, target, _ = slos[name]
+            series = []
+            for i, (name, labels) in enumerate(self._hmeta):
+                slo = slos.get((name, labels)) or slos.get((name, ()))
+                if slo is not None:
+                    series.append((i, name, labels, slo))
+            deltas = {i: self._hdelta_locked(i, slo[2])
+                      for i, name, labels, slo in series}
+        for i, name, labels, (slo_us, target, _) in series:
             d = deltas[i]
             n = d.sum()
             over = d[min(N_BUCKETS, bucket_of(slo_us) + 1):].sum()
@@ -530,7 +537,8 @@ class MetricsHttpServer:
 
 # fields that are levels, not cumulative counts, in serving snapshots
 _GAUGE_FIELDS = {"queue_depth", "queue_depth_peak", "blocks_in_use",
-                 "peak_blocks_in_use", "wall_s"}
+                 "peak_blocks_in_use", "wall_s", "spill_live_bytes",
+                 "shed_level"}
 
 
 def install_genesys_collector(registry: MetricsRegistry, gsys) -> None:

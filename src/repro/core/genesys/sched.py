@@ -163,9 +163,18 @@ class PolicyEngine:
                 return o
         return None
 
-    def reaped(self, tenant, entries) -> None:
+    def reaped(self, tenant, entries, charged=None) -> None:
+        """``entries`` is what was actually popped (true call counts —
+        Deadline retires stamps against it); ``charged`` is the planned
+        batch's fuse-aware QoS view (one entry per kernel crossing, see
+        ``SyscallRing.plan``). Policies exposing ``on_reap_charged`` get
+        both; everyone else sees the true entries."""
         for p in self.policies:
-            p.on_reap(tenant, entries)
+            f = getattr(p, "on_reap_charged", None)
+            if f is not None and charged is not None:
+                f(tenant, entries, charged)
+            else:
+                p.on_reap(tenant, entries)
 
     def closed(self, tenant) -> None:
         for p in self.policies:
@@ -370,67 +379,107 @@ class Deadline(Policy):
 
 
 class WeightedFair(Policy):
-    """Weighted-fair-queueing credit accounting per tenant and per sysno.
+    """Weighted-fair-queueing credit accounting per WFQ *node* and sysno.
 
-    Every reaped entry charges ``costs.get(sysno, 1.0) / tenant.weight``
-    of virtual time; pollers visit tenants in ascending vtime, so over any
-    busy interval tenant throughput converges to the weight ratio. The
-    per-(tenant, sysno) cumulative charges are kept in :attr:`charged` —
-    the accounting ledger a billing/debug layer can read.
+    A node is the tenant's ``group`` name when set (cgroup-style: a
+    customer with 50 connections is 50 tenants sharing ONE node, one
+    vtime, one quantum budget — a single scheduling entity) and the
+    tenant's own name otherwise. Every reaped entry charges
+    ``costs.get(sysno, 1.0) / weight`` of virtual time to the node;
+    pollers visit tenants in ascending node vtime, so over any busy
+    interval *node* throughput converges to the weight ratio regardless
+    of how many connections a node splits itself into. The per-(node,
+    sysno) cumulative charges are kept in :attr:`charged` — the
+    accounting ledger a billing/debug layer can read.
+
+    Fuse-aware costing: when the poller hands over a planned batch's
+    ``qos_entries()`` (via ``on_reap_charged``), charges count kernel
+    *crossings* — a Coalescer-merged read group of 32 adjacent preads
+    charges one crossing, not 32.
 
     The quantum hook scales each visit's pop bound by
-    ``weight / max_weight_seen``: a weight-1 tenant next to a weight-32
-    tenant contributes at most ``batch_max/32`` entries of head-of-line
-    blocking per visit.
+    ``node_weight / max_node_weight``: a weight-1 node next to a
+    weight-32 node contributes at most ``batch_max/32`` entries of
+    head-of-line blocking per visit.
     """
 
     def __init__(self, costs=None):
         self.costs = {int(k): float(v) for k, v in (costs or {}).items()}
         self._lock = threading.Lock()
-        self.vtime: dict[str, float] = {}
-        self.charged: dict[str, dict[int, float]] = {}
-        self._weights: dict[str, float] = {}   # live tenants' weights
+        self.vtime: dict[str, float] = {}                # node -> vtime
+        self.charged: dict[str, dict[int, float]] = {}   # node -> ledger
+        self._weights: dict[str, float] = {}   # live nodes' weights
+        self._members: dict[str, dict[str, float]] = {}  # node -> members
+
+    @staticmethod
+    def _node(tenant) -> str:
+        return getattr(tenant, "group", None) or tenant.name
 
     def order_key(self, tenant):
         with self._lock:
-            return self.vtime.get(tenant.name, 0.0)
+            return self.vtime.get(self._node(tenant), 0.0)
 
     def quantum(self, tenant, default: int):
+        node = self._node(tenant)
         w = float(getattr(tenant, "weight", 1.0))
         with self._lock:
-            self._weights[tenant.name] = w
-            # max over *live* tenants: a closed heavyweight must not keep
+            members = self._members.setdefault(node, {})
+            members[tenant.name] = w
+            # the node's weight is its heaviest live member's — a group
+            # does not grow scheduling share by opening more connections
+            self._weights[node] = max(members.values())
+            # max over *live* nodes: a closed heavyweight must not keep
             # everyone else's quantum shrunken forever
-            ratio = w / max(max(self._weights.values()), 1.0)
+            ratio = self._weights[node] / max(
+                max(self._weights.values()), 1.0)
         return max(1, int(default * ratio))
 
     def on_close(self, tenant) -> None:
+        node = self._node(tenant)
         with self._lock:
-            self._weights.pop(tenant.name, None)
-            self.vtime.pop(tenant.name, None)
-            self.charged.pop(tenant.name, None)
+            members = self._members.get(node)
+            if members is not None:
+                members.pop(tenant.name, None)
+            if members:
+                self._weights[node] = max(members.values())
+                return      # siblings keep the node's vtime/ledger alive
+            self._members.pop(node, None)
+            self._weights.pop(node, None)
+            self.vtime.pop(node, None)
+            self.charged.pop(node, None)
 
     def on_reap(self, tenant, entries) -> None:
+        self._charge(tenant, entries)
+
+    def on_reap_charged(self, tenant, entries, charged) -> None:
+        """Fuse-aware reap: vtime/ledger charges come from the planned
+        batch's kernel-crossing view, not the raw popped entries."""
+        self._charge(tenant, charged)
+
+    def _charge(self, tenant, entries) -> None:
+        node = self._node(tenant)
         w = max(float(getattr(tenant, "weight", 1.0)), 1e-9)
         with self._lock:
-            ledger = self.charged.setdefault(tenant.name, {})
+            if node in self._weights:
+                w = max(self._weights[node], 1e-9)
+            ledger = self.charged.setdefault(node, {})
             cost = 0.0
             for _slot, _ud, _fl, sysno in entries:
                 c = self.costs.get(sysno, 1.0)
                 cost += c
                 ledger[sysno] = ledger.get(sysno, 0.0) + c
-            # WFQ vtime clamp, applied on a tenant's FIRST charge only: a
-            # tenant created late starts from the lagging incumbent's
+            # WFQ vtime clamp, applied on a node's FIRST charge only: a
+            # node created late starts from the lagging incumbent's
             # vtime, not from zero — otherwise it would monopolize the
             # pollers until it "caught up" with incumbents' historic
-            # charges. Continuously-active tenants are never clamped, so
+            # charges. Continuously-active nodes are never clamped, so
             # a laggard keeps the preference it legitimately earned.
-            if tenant.name in self.vtime:
-                base = self.vtime[tenant.name]
+            if node in self.vtime:
+                base = self.vtime[node]
             else:
                 others = list(self.vtime.values())
                 base = min(others) if others else 0.0
-            self.vtime[tenant.name] = base + cost / w
+            self.vtime[node] = base + cost / w
 
 
 @dataclass
@@ -544,13 +593,30 @@ class PollerGroup:
             default_q = m.ring.batch_max
             q = (self.engine.quantum(m.tenant, default_q)
                  if self.engine is not None else default_q)
+            if m.tenant is not None:
+                # bounded reap-credit ledger (per-tenant CQ backpressure):
+                # never pop more than the tenant's CQ can absorb, and skip
+                # the ring entirely when its reaper has let credit run dry
+                # — a slow reaper stalls ITS ring at ~cq_depth outstanding
+                # CQEs; it cannot wedge the group or grow an unbounded CQ
+                # backlog. The global (tenant-less) ring keeps the old
+                # spill-to-backlog semantics.
+                credit = m.ring.reap_credit()
+                if credit <= 0:
+                    m.ring.counters.add(credit_stalls=1)
+                    continue
+                q = min(q, credit)
             entries = m.ring.pop_entries(q)
             if not entries:
                 m.ring.counters.add(empty_polls=1)
                 continue
-            m.ring.dispatch_entries(entries, inline=self.inline)
+            batch = m.ring.plan(entries)
+            charge = (batch.qos_entries()
+                      if self.engine is not None and m.tenant is not None
+                      else None)
+            m.ring.dispatch_batch(batch, inline=self.inline)
             if self.engine is not None and m.tenant is not None:
-                self.engine.reaped(m.tenant, entries)
+                self.engine.reaped(m.tenant, entries, charged=charge)
             n = len(entries)
 
             def _acct(s, m=m, n=n):

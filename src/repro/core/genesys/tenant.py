@@ -55,10 +55,18 @@ class Tenant:
                  rate_limit: float | None = None, burst: float | None = None,
                  engine: PolicyEngine | None = None,
                  deadline_us: float | None = None,
-                 coalesce_max: int | None = None):
+                 coalesce_max: int | None = None,
+                 group: str | None = None):
         self.name = str(name)
         self.ring = ring
+        # fault plans (admit.FaultPlan) key errno schedules on the ring's
+        # owning tenant, whichever dispatch path a call takes
+        ring.owner = self.name
         self.area: SyscallArea = ring.area       # the carved partition
+        # cgroup-style admission/WFQ group: tenants sharing a group name
+        # share ONE WeightedFair node (one vtime, one quantum budget) and
+        # one admission burn budget; None = this tenant is its own node
+        self.group = None if group is None else str(group)
         self.weight = float(weight)
         self.priority = int(priority)
         self.rate_limit = rate_limit

@@ -72,6 +72,7 @@ class RingStats:
     bundles: int = 0            # batches handed to the executor
     polls: int = 0              # non-empty SQ polls
     empty_polls: int = 0        # poller visits that found the SQ empty
+    credit_stalls: int = 0      # poller visits skipped: CQ reap credit gone
     # (park/wakeup counts live on the poller: sched.SchedStats.wakeups)
     batch_hist: dict = field(default_factory=dict)
 
@@ -108,11 +109,16 @@ class _RingBatch:
     def __len__(self) -> int:
         return len(self.entries)
 
+    def qos_entries(self):
+        """What the scheduler should charge for this batch: one entry per
+        actual kernel crossing. An unfused batch crosses once per entry."""
+        return self.entries
+
     def process(self, ex: Executor) -> None:
         ring = self.ring
         # the ring's area, not the executor's: tenant rings run over a
         # carved partition whose slots must retire to their own free list
-        area, table = ring.area, ex.table
+        area = ring.area
         slots = [e[0] for e in self.entries]
         n = len(slots)
         tr = ring.trace
@@ -132,14 +138,15 @@ class _RingBatch:
                              aux=tr.thread_aux(), own=True)
             area.claim_many(slots)
             recs = area.slots
+            owner = ring.owner
             rets = []
             for slot in slots:
                 rec = recs[slot]
-                try:
-                    ret = table.dispatch(rec["sysno"], rec["args"])
-                except Exception:        # handler blew past dispatch's
-                    ret = -5             # OSError net: surface -EIO, keep
-                rets.append(ret)         # the worker and the bundle alive
+                # the one dispatch funnel: fault injection + bounded retry
+                # for transient errnos; exceptions net to -EIO inside, so
+                # the worker and the bundle stay alive
+                rets.append(ex.dispatch_call(rec["sysno"], rec["args"],
+                                             owner))
             area.complete_many(slots, rets)
             # counters + COMPLETE events before futures/CQEs become
             # visible, so a snapshot can never show reaped > processed
@@ -184,6 +191,9 @@ class SyscallRing:
         self.stats = self.counters.stats
         # lifecycle trace channel (a trace.TraceChannel); None = off
         self.trace = None
+        # owning tenant's name (set by Tenant); fault plans key their
+        # errno schedules on it, None = the global/unowned ring
+        self.owner = None
         # SQ ring: slot index + user_data + flags + sysno per entry
         # ("shared memory"; sysno rides along so pollers can do per-sysno
         # QoS cost accounting without touching the slot area)
@@ -483,30 +493,58 @@ class SyscallRing:
                          aux=tr.thread_aux(), own=True)
         return entries
 
-    def dispatch_entries(self, entries, *, inline: bool = False) -> None:
-        """Run one popped bundle. ``inline=False`` hands it to the executor
+    def reap_credit(self) -> int:
+        """The bounded reap-credit ledger (per-tenant CQ backpressure,
+        closing PR 3's open item): how many more CQEs this ring's consumer
+        has *room* to absorb before the CQ would spill into the unbounded
+        backlog. Pollers serving tenant rings clamp their pop quantum to
+        this, so a slow reaper's ring stalls at ~``cq_depth`` outstanding
+        completions instead of growing a backlog forever — and instead of
+        wedging the :class:`~repro.core.genesys.sched.PollerGroup`, which
+        simply skips the ring until the reaper drains credit back.
+        Calls that never asked for CQEs consume no credit."""
+        cq = self.cq
+        with cq._lock:
+            pending = (cq._tail - cq._head) + len(cq._backlog)
+        return cq.depth - pending
+
+    def plan(self, entries):
+        """Build the dispatchable batch for one popped bundle — the fuse
+        pre-pass happens here. The returned batch exposes
+        ``qos_entries()``: the entries the scheduler should charge, one
+        per actual kernel crossing (a fused read group charges once,
+        not per member)."""
+        if self.fuse is not None:
+            return self.fuse.bundle(self, entries)
+        return _RingBatch(self, entries)
+
+    def dispatch_batch(self, batch, *, inline: bool = False) -> None:
+        """Run a planned batch. ``inline=False`` hands it to the executor
         worker pool (one queue op); ``inline=True`` processes it on the
         calling thread — io_uring SQPOLL's do-the-work-in-the-poller mode,
-        which keeps a latency tenant's calls out of the shared worker queue
-        entirely (see genesys.sched).
-
-        Rings with a :class:`~repro.core.genesys.fuse.Coalescer` attached
-        (``fuse=``) run the popped bundle through the cross-call fusion
-        pre-pass here — the step between pop and dispatch — so both the
-        PollerGroup reap path and direct process_pending() callers get
-        semantic coalescing."""
-        if not len(entries):
+        which keeps a latency tenant's calls out of the shared worker
+        queue entirely (see genesys.sched)."""
+        if not len(batch):
             return
-        if self.fuse is not None:
-            batch = self.fuse.bundle(self, entries)
-        else:
-            batch = _RingBatch(self, entries)
         if inline:
             ex = self.executor
             ex.counters.add(ring_bundles=1)
             batch.process(ex)
         else:
             self.executor.submit_bundle(batch, counted=True)
+
+    def dispatch_entries(self, entries, *, inline: bool = False) -> None:
+        """Plan + run one popped bundle (see :meth:`plan` /
+        :meth:`dispatch_batch`; split so the PollerGroup can read the
+        planned batch's fuse-aware QoS charges before dispatching).
+
+        Rings with a :class:`~repro.core.genesys.fuse.Coalescer` attached
+        (``fuse=``) get the cross-call fusion pre-pass here — the step
+        between pop and dispatch — so both the PollerGroup reap path and
+        direct process_pending() callers get semantic coalescing."""
+        if not len(entries):
+            return
+        self.dispatch_batch(self.plan(entries), inline=inline)
 
     def process_pending(self, max_n: int | None = None, *,
                         inline: bool = False) -> int:

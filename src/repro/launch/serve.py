@@ -93,6 +93,19 @@ def main() -> None:
                          "are derived every metrics tick")
     ap.add_argument("--slo-target", type=float, default=0.999,
                     help="fraction of requests that must meet --slo-us")
+    ap.add_argument("--admit", action="store_true",
+                    help="SLO-driven admission control: classify requests "
+                         "into --slo-class groups, shed/degrade under burn "
+                         "(shed replies carry SHED_TOKEN)")
+    ap.add_argument("--slo-class", action="append", default=[],
+                    metavar="NAME:SLO_US[:TARGET[:RANK]]",
+                    help="declare an admission class (repeatable); RANK 0 "
+                         "(default) is protected — degraded, never shed; "
+                         "higher ranks shed first")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection: "
+                         "'SEED[;TENANT:SYSNO:ERRNO:RATE]...' with '*' "
+                         "wildcards (e.g. '7;*:45:EAGAIN:0.01')")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -111,6 +124,30 @@ def main() -> None:
                                  trace=args.trace_out is not None))
     if args.tenants:
         gsys.use_policies(TokenBucket(), StrictPriority(), WeightedFair())
+    if args.fault_plan:
+        from repro.core.genesys import FaultPlan
+        plan = gsys.use_fault_plan(FaultPlan.parse(args.fault_plan))
+        print(f"fault plan installed: seed={plan.seed} "
+              f"rules={len(plan._rules)}", flush=True)
+    controller = None
+    if args.admit:
+        from repro.core.genesys import AdmissionController
+        controller = AdmissionController(gsys.metrics)
+        classes = []
+        for spec in (args.slo_class or ["default:50000"]):
+            parts = spec.split(":")
+            name = parts[0]
+            slo = float(parts[1]) if len(parts) > 1 else None
+            target = float(parts[2]) if len(parts) > 2 else 0.999
+            rank = int(parts[3]) if len(parts) > 3 else 0
+            classes.append(controller.declare(
+                name, slo_us=slo, target=target, priority_class=rank))
+        # clients hash into classes by id; a custom mapper can replace this
+        controller.map_default(
+            lambda cid, _c=classes: _c[int(cid) % len(_c)].name)
+        controller.install(gsys)
+        print(f"admission control on: "
+              f"{', '.join(c.name for c in classes)}", flush=True)
 
     reporter = stop_stats = None
     if args.stats_interval > 0:
@@ -133,7 +170,7 @@ def main() -> None:
     api = get_api(cfg)
     params, _ = api.init(jax.random.PRNGKey(0), cfg)
     srv = GenesysUdpServer(gsys, port=args.port, use_ring=args.use_ring,
-                           use_tenants=args.tenants)
+                           use_tenants=args.tenants, admission=controller)
     with mesh:
         if args.continuous:
             from repro.serving.engine import make_engine
@@ -141,6 +178,7 @@ def main() -> None:
                 cfg, rules, params, n_slots=args.slots,
                 n_blocks=args.kv_blocks, block_size=args.block_size,
                 gsys=gsys, spill_path=args.spill)
+            engine.admission = controller
             stats = srv.serve_model_continuous(
                 engine, reply_port=args.reply_port,
                 max_tokens=args.max_tokens,
@@ -165,6 +203,10 @@ def main() -> None:
         for name, t in sorted(gsys.tenants().items()):
             print(f"tenant {name}: submitted={t.stats.submitted} "
                   f"reaped={t.stats.reaped} throttled={t.stats.throttled}")
+    if controller is not None:
+        a = controller.counters.snapshot()
+        print(f"admit: admitted={a['admitted']} degraded={a['degraded']} "
+              f"shed={a['shed']} level={a['shed_level']:.2f}")
     if reporter is not None:
         stop_stats.set()
         reporter.join(timeout=2)

@@ -93,6 +93,10 @@ class ContinuousBatchEngine:
         # decode dispatch records one EV_STEP per active span, and
         # retirement syscalls run under the request's span context
         self.trace = None
+        # optional genesys.admit AdmissionController: admission failures
+        # for want of capacity nudge its shed level up (note_pressure) —
+        # a leading overload signal, ahead of SLO burn confirming it
+        self.admission = None
         self._step_idx = 0
         # wire the pool's eviction spill to the device arenas
         pool.extractor = self._extract_block
@@ -158,6 +162,8 @@ class ContinuousBatchEngine:
                 f"{self.max_blocks}")
         slot = next((i for i, s in enumerate(self._slots) if s is None), None)
         if slot is None:
+            if self.admission is not None:
+                self.admission.note_pressure()
             return False
         # prefix reuse: only WHOLE blocks strictly before the last prompt
         # token (at least one token must remain to feed, and writes must
@@ -168,6 +174,8 @@ class ContinuousBatchEngine:
             fresh = self.pool.alloc(n_blocks - len(reused))
         except PoolExhausted:
             self.pool.retire(reused)        # sealed blocks re-park in LRU
+            if self.admission is not None:
+                self.admission.note_pressure()
             return False
         for bid, payload in fetches:
             self._install_block(bid, payload)

@@ -67,6 +67,8 @@ class PagedKVStats:
     prefix_hits: int = 0        # lookups served from cache (arena or spill)
     spill_writes: int = 0       # evicted blocks written out via PWRITE64
     spill_bytes: int = 0        # bytes those spill writes moved
+    spill_live_bytes: int = 0   # bytes of spill extents still revivable
+    spill_compactions: int = 0  # spill-file compaction passes run
     fixed_reads: int = 0        # spilled blocks revived via PREAD64_FIXED
     revival_bytes: int = 0      # bytes those revivals read back
     evictions: int = 0          # cached blocks reclaimed for allocation
@@ -119,6 +121,8 @@ class PagedKVPool:
         self._spill_fd = -1
         self._spill_free: deque[int] = deque()
         self._spill_slots = 0
+        self._spill_live = 0          # slots holding a revivable extent
+        self._compact_ratio = 0.5
         self._stage = None
         self._stage_idx = -1
         self._stage_h = -1
@@ -137,7 +141,8 @@ class PagedKVPool:
     # ------------------------------------------------------------ genesys ----
     def bind_genesys(self, gsys, *, block_bytes: int,
                      spill_path: str | None = None,
-                     spill_slots: int = 0) -> None:
+                     spill_slots: int = 0,
+                     spill_compact_ratio: float = 0.5) -> None:
         """Back the arena with genesys-managed memory and (optionally) a
         spill file for evicted prefix blocks.
 
@@ -146,6 +151,11 @@ class PagedKVPool:
         mmap'd through a dedicated ``pagedkv`` tenant ring; allocation
         touches the region resident, free MADV_DONTNEEDs it, so
         ``gsys.pool.rss_bytes`` tracks blocks actually holding KV.
+
+        ``spill_compact_ratio`` triggers :meth:`compact_spill` from the
+        spill path once live extents fall below that fraction of the
+        slots in use (dead extents come from failed revivals and
+        superseded hashes — the spill file never reuses a slot in place).
         """
         self._gsys = gsys
         self._block_bytes = int(block_bytes)
@@ -163,6 +173,7 @@ class PagedKVPool:
             gsys.heap.release(ph)
             self._spill_slots = int(spill_slots) or 4 * self.n_blocks
             self._spill_free = deque(range(self._spill_slots))
+            self._compact_ratio = float(spill_compact_ratio)
             # PREAD64_FIXED staging buffer: registered once, resolved
             # never again — the zero-resolve decode-fill read path
             self._stage_h = gsys.heap.new_buffer(self._block_bytes)
@@ -184,14 +195,28 @@ class PagedKVPool:
         for c in comps:
             c.result()
 
+    def _note_spill_live(self, delta: int) -> None:
+        self._spill_live += delta
+        live_bytes = self._spill_live * self._block_bytes
+        self.counters.update(
+            lambda s: setattr(s, "spill_live_bytes", live_bytes))
+
+    def _spill_fragmented(self) -> bool:
+        used = self._spill_slots - len(self._spill_free)
+        return used > 0 and self._spill_live < used * self._compact_ratio
+
     def _spill(self, bid: int) -> None:
         """Write an evicted sealed block's contents to the spill file so a
         later prefix hit can revive it (PWRITE64 through the tenant ring)."""
         h = self._hash_of[bid]
-        if (h is None or self._spill_fd < 0 or self.extractor is None
-                or not self._spill_free):
+        if h is None or self._spill_fd < 0 or self.extractor is None:
             if h is not None:
                 self._by_hash.pop(h, None)
+            return
+        if not self._spill_free or self._spill_fragmented():
+            self.compact_spill()
+        if not self._spill_free:
+            self._by_hash.pop(h, None)
             return
         payload = np.frombuffer(self.extractor(bid), dtype=np.uint8)
         if payload.nbytes != self._block_bytes:
@@ -211,6 +236,7 @@ class PagedKVPool:
             self._by_hash.pop(h, None)
             return
         self._by_hash[h] = ("spill", slot)
+        self._note_spill_live(1)
         self.counters.add(spill_writes=1, spill_bytes=self._block_bytes)
 
     def _fetch_spill(self, slot: int) -> bytes:
@@ -225,6 +251,50 @@ class PagedKVPool:
         self.counters.add(fixed_reads=1, revival_bytes=self._block_bytes)
         self._spill_free.append(slot)
         return bytes(np.asarray(self._stage)[:self._block_bytes].tobytes())
+
+    def compact_spill(self) -> int:
+        """Reclaim dead spill-file extents. Slots whose entry was dropped
+        — a revival's PREAD failed mid-flight, or its hash was superseded
+        — are never reused in place; they accumulate until this pass
+        relocates every live extent down to the lowest slot indices and
+        rebuilds the free list from everything above the live watermark.
+        Returns the number of slots reclaimed."""
+        if self._spill_fd < 0 or not self._spill_slots:
+            return 0
+        live = sorted((slot, h) for h, (kind, slot) in self._by_hash.items()
+                      if kind == "spill")
+        before = len(self._spill_free)
+        dst = 0
+        for src, h in live:
+            if src != dst:
+                # relocate through the registered staging buffer: one
+                # PREAD64_FIXED + one PWRITE64 per surviving extent; live
+                # slots are sorted ascending so dst never passes src and
+                # no unmoved extent can be overwritten
+                n = self._tenant.call(Sys.PREAD64_FIXED, self._spill_fd,
+                                      self._stage_idx, self._block_bytes,
+                                      src * self._block_bytes)
+                if n != self._block_bytes:
+                    self._by_hash.pop(h, None)
+                    self._note_spill_live(-1)
+                    continue
+                bh = self._gsys.heap.register(
+                    np.asarray(self._stage)[:self._block_bytes].copy())
+                try:
+                    w = self._tenant.call(Sys.PWRITE64, self._spill_fd, bh,
+                                          self._block_bytes,
+                                          dst * self._block_bytes)
+                finally:
+                    self._gsys.heap.release(bh)
+                if w != self._block_bytes:
+                    self._by_hash.pop(h, None)
+                    self._note_spill_live(-1)
+                    continue
+                self._by_hash[h] = ("spill", dst)
+            dst += 1
+        self._spill_free = deque(range(dst, self._spill_slots))
+        self.counters.add(spill_compactions=1)
+        return len(self._spill_free) - before
 
     # --------------------------------------------------------- allocation ----
     def free_blocks(self) -> int:
@@ -300,10 +370,14 @@ class PagedKVPool:
                     payload = self._fetch_spill(where)
                     bid = self.alloc(1)[0]
                 except (PoolExhausted, OSError):
+                    # the extent is dead either way; a failed PREAD also
+                    # leaks its slot until compact_spill reclaims it
                     self._by_hash.pop(h, None)
+                    self._note_spill_live(-1)
                     break
                 self._hash_of[bid] = h
                 self._by_hash[h] = ("arena", bid)
+                self._note_spill_live(-1)
                 fetches.append((bid, payload))
                 ids.append(bid)
             self.counters.add(prefix_hits=1)

@@ -58,6 +58,13 @@ STATS_MAGIC = b"GSTATS1\x00"
 METRICS_MAGIC = b"GMETRX1\x00"
 _STATS_MAX_DGRAM = 60000      # stay under the UDP payload ceiling
 
+# admission-control shed reply: a one-token body ``[SHED_TOKEN]`` (after
+# the echoed tag) tells an open-loop client its request was refused by
+# load shedding — not lost, not failed — so it can back off or retry
+# against a lower-rank class. Negative, so it can never collide with a
+# real generated token id (vocab ids are non-negative).
+SHED_TOKEN = -503
+
 
 @dataclass
 class ServeStats:
@@ -79,6 +86,9 @@ class ServeStats:
     queue_depth: int = 0         # parsed requests awaiting a slot
     queue_depth_peak: int = 0
     poll_skips: int = 0          # polls skipped: admission was impossible
+    # genesys.admit decisions taken at the serving front end
+    shed_requests: int = 0       # refused: answered [SHED_TOKEN], not queued
+    degraded_requests: int = 0   # served with a halved token budget
 
 
 class GenesysUdpServer:
@@ -87,12 +97,16 @@ class GenesysUdpServer:
     def __init__(self, gsys: Genesys, *, port: int, max_batch: int = 8,
                  batch_window_s: float = 0.005, payload: int = 4096,
                  use_ring: bool = False, use_tenants: bool = False,
-                 tx_shards: int = 8):
+                 tx_shards: int = 8, admission=None):
         self.gsys = gsys
         self.port = port
         self.max_batch = max_batch
         self.window = batch_window_s
         self.payload = payload
+        # genesys.admit AdmissionController (or None): requests then carry
+        # a client id word ([budget, tag, client, prompt...]) and shed
+        # requests are answered with [SHED_TOKEN] instead of being queued
+        self.admission = admission
         self.use_tenants = use_tenants
         self.use_ring = use_ring or use_tenants
         self.tx_shards = max(1, int(tx_shards))
@@ -299,11 +313,31 @@ class GenesysUdpServer:
             tracer = self.gsys.tracer
             ch = tracer.channel("requests") if tracer is not None else None
             t_parse = time.perf_counter_ns()
-            parsed = [parse_request(r, per_request_tokens, max_tokens)
+            adm = self.admission if per_request_tokens else None
+            parsed = [parse_request(r, per_request_tokens, max_tokens,
+                                    with_client=adm is not None)
                       for r in reqs]
+            if adm is not None:
+                # admission decisions before anything queues: sheds are
+                # answered now ([SHED_TOKEN]), degrades lose half their
+                # token budget, admits pass through untouched
+                kept = []
+                for toks_i, budget, tag, client in parsed:
+                    verdict = adm.admit_request(client)
+                    if verdict == "shed":
+                        self.reply([encode_reply([SHED_TOKEN], tag)],
+                                   reply_port)
+                        self.counters.add(shed_requests=1)
+                        continue
+                    if verdict == "degrade":
+                        budget = max(1, budget >> 1)
+                        self.counters.add(degraded_requests=1)
+                    kept.append((toks_i, budget, tag, client))
+                parsed = kept
             toks = [p[0] for p in parsed]
             budgets = [p[1] for p in parsed]
             tags = [p[2] for p in parsed]
+            clients = [p[3] if len(p) > 3 else None for p in parsed]
             spans = [0] * len(parsed)
             if ch is not None:
                 spans = [tracer.next_seq() for _ in parsed]
@@ -326,10 +360,14 @@ class GenesysUdpServer:
                     if sp:
                         ch.rec(EV_REQ_END, REQ_SYSNO, sp, aux=len(gn),
                                ts=end)
-                self._wall_hist.observe_block(
-                    [(end - t_parse) / 1e3] * len(parsed))
+                wall_us = (end - t_parse) / 1e3
+                self._wall_hist.observe_block([wall_us] * len(parsed))
+                if adm is not None:
+                    for client in clients:
+                        adm.observe(client, wall_us)
             else:
-                for t, n_i, tag, sp in zip(toks, budgets, tags, spans):
+                for t, n_i, tag, sp, client in zip(toks, budgets, tags,
+                                                   spans, clients):
                     t1 = time.perf_counter_ns()
                     gen = _greedy_decode(serve_fn, params, cache, cache_len,
                                          t, n_i)
@@ -343,8 +381,10 @@ class GenesysUdpServer:
                         ch.rec(EV_REQ_END, REQ_SYSNO, sp, aux=len(gen))
                     else:
                         self.reply([encode_reply(gen, tag)], reply_port)
-                    self._wall_hist.observe(
-                        (time.perf_counter_ns() - t1) / 1e3)
+                    wall_us = (time.perf_counter_ns() - t1) / 1e3
+                    self._wall_hist.observe(wall_us)
+                    if adm is not None:
+                        adm.observe(client, wall_us)
                     self.counters.add(tokens_out=len(gen),
                                       decode_dispatches=n_i,
                                       decode_steps=n_i)
@@ -390,7 +430,8 @@ class GenesysUdpServer:
         tracer = self.gsys.tracer
         ch = tracer.channel("requests") if tracer is not None else None
         engine.trace = ch
-        # queue entries: (toks, budget, tag, span, t_parse_ns)
+        adm = self.admission
+        # queue entries: (toks, budget, tag, span, t_parse_ns, client)
         queue: list[tuple] = []
         idle = 0
         replied = 0
@@ -408,14 +449,32 @@ class GenesysUdpServer:
                 self.counters.add(requests=len(reqs), batches=1)
                 now_ns = time.perf_counter_ns()
                 for r in reqs:
-                    toks, budget, tag = parse_request(
-                        r, per_request_tokens, max_tokens)
+                    if adm is not None:
+                        toks, budget, tag, client = parse_request(
+                            r, per_request_tokens, max_tokens,
+                            with_client=True)
+                        verdict = adm.admit_request(client)
+                        if verdict == "shed":
+                            # answer now, queue nothing: the [SHED_TOKEN]
+                            # reply is the wire-visible degradation signal
+                            self.reply([encode_reply([SHED_TOKEN], tag)],
+                                       reply_port)
+                            self.counters.add(shed_requests=1)
+                            replied += 1
+                            continue
+                        if verdict == "degrade":
+                            budget = max(1, budget >> 1)
+                            self.counters.add(degraded_requests=1)
+                    else:
+                        toks, budget, tag = parse_request(
+                            r, per_request_tokens, max_tokens)
+                        client = None
                     span = 0
                     if ch is not None:
                         span = tracer.next_seq()
                         ch.rec(EV_REQ_BEGIN, REQ_SYSNO, span, aux=budget,
                                ts=now_ns)
-                    queue.append((toks, budget, tag, span, now_ns))
+                    queue.append((toks, budget, tag, span, now_ns, client))
             elif not busy:
                 idle += 1
                 if n_requests is None or idle >= max_idle_polls:
@@ -424,8 +483,8 @@ class GenesysUdpServer:
             # admit as many queued requests as slots/blocks allow — the
             # rest stay queued and retry after the next retirements
             while queue:
-                toks, budget, tag, span, tns = queue[0]
-                meta = (tag, span, tns)
+                toks, budget, tag, span, tns, client = queue[0]
+                meta = (tag, span, tns, client)
                 if span:
                     # admission syscalls (spill revivals, block touches)
                     # belong to this request's span
@@ -443,15 +502,19 @@ class GenesysUdpServer:
                 setattr(s, "queue_depth_peak",
                         max(s.queue_depth_peak, depth))))
             for meta, gen in engine.step():
-                tag, span, tns = meta
+                tag, span, tns, client = meta
                 if span:
                     with tracer.span(span):
                         self.reply([encode_reply(gen, tag)], reply_port)
                     ch.rec(EV_REQ_END, REQ_SYSNO, span, aux=len(gen))
                 else:
                     self.reply([encode_reply(gen, tag)], reply_port)
-                self._wall_hist.observe(
-                    (time.perf_counter_ns() - tns) / 1e3)
+                wall_us = (time.perf_counter_ns() - tns) / 1e3
+                self._wall_hist.observe(wall_us)
+                if adm is not None and client is not None:
+                    # the burn-rate/windowed-p99 input the controller's
+                    # next refresh() reads — closing the control loop
+                    adm.observe(client, wall_us)
                 self.counters.add(tokens_out=len(gen))
                 replied += 1
         self.gsys.drain()
@@ -470,21 +533,30 @@ def cache_batch_size(cache) -> int:
 
 
 def parse_request(req: np.ndarray, per_request_tokens: bool,
-                  default_tokens: int
-                  ) -> tuple[np.ndarray, int, int | None]:
+                  default_tokens: int, with_client: bool = False):
     """Decode one datagram into ``(prompt_tokens, budget, tag)``.
 
     Plain format: the whole payload is int32 prompt tokens; the budget is
     the server-wide ``max_tokens`` and replies carry no tag. Per-request
     format (``per_request_tokens=True``): ``[budget, tag, prompt...]`` —
     the tag is echoed first in the reply so an open-loop client can match
-    out-of-order completions to its requests."""
+    out-of-order completions to its requests.
+
+    ``with_client=True`` (admission-controlled servers) reads one more
+    word — ``[budget, tag, client, prompt...]`` — and returns the
+    4-tuple ``(prompt_tokens, budget, tag, client)``: the client id the
+    :class:`~repro.core.genesys.admit.AdmissionController` maps to an
+    admission group."""
     toks = np.frombuffer(req.tobytes(), dtype=np.int32)
     if not per_request_tokens:
-        return toks, default_tokens, None
+        return (toks, default_tokens, None, None) if with_client \
+            else (toks, default_tokens, None)
     budget = max(1, int(toks[0])) if len(toks) else 1
     tag = int(toks[1]) if len(toks) > 1 else 0
-    return toks[2:], budget, tag
+    if not with_client:
+        return toks[2:], budget, tag
+    client = int(toks[2]) if len(toks) > 2 else 0
+    return toks[3:], budget, tag, client
 
 
 def encode_reply(gen, tag: int | None) -> bytes:

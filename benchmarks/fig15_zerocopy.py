@@ -1,0 +1,305 @@
+"""Fig 15 (repo extension of the paper's §5 data-path study): the
+genesys.arena zero-copy data plane vs the legacy dict-of-objects heap.
+
+Three measurements, three gates:
+
+  * **dispatch hot loop** — the fig8 pread hot loop run at the dispatch
+    funnel (``Executor.dispatch_call``), arena-default vs
+    ``GenesysConfig(arena=False)``. The arena resolves a handle to one
+    bounds-checked segment slice and completions land in place; the
+    legacy heap round-trips every byte through intermediate buffers.
+    Gate: >= 1.3x at 4 KiB and 64 KiB reads. ECHO is reported, not
+    gated (it never touches a buffer, so the ratio is parity noise).
+  * **fused scatter-back** — ``scatter_read_group`` over a wide group of
+    small arena extents (the coalescing regime's shape: adjacent ranges
+    scattered to sequentially carved buffers) vs the same group on the
+    dict heap, which takes the per-member serial loop the fused path
+    shipped with originally. Gate: >= 1.5x at 256 members x 64 B;
+    128 members is reported.
+  * **bytes copied per call** — ``SyscallTable.copies`` accounting over
+    an identical pread workload on both heaps. Arena completions write
+    into the caller's extent, so the data-path copy counters stay ~0;
+    the legacy heap pays the full read size per call. Gate: arena
+    bytes/call <= 0.1x legacy bytes/call.
+
+``--check-echo-budget`` is the CI regression tripwire: it runs an
+echo + in-place pread workload on the default (arena) config and fails
+if the measured data-path bytes-copied per call ever exceeds
+``--budget-bytes-per-call`` (default 8 — the measured value is 0, the
+budget leaves headroom for accounting churn, not for copies).
+
+The timed comparisons run interleaved and judge the trimmed mean of
+per-repeat paired ratios (same noise discipline as fig10/fig11).
+
+Output CSV: name,us_per_call,derived.  ``--out PATH`` additionally
+writes the ratio dict as a JSON artifact for CI to archive.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):       # `python benchmarks/fig15_zerocopy.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import numpy as np                                                  # noqa: E402
+
+from repro.core.genesys import Sys                                  # noqa: E402
+from repro.core.genesys.arena import HostArena                      # noqa: E402
+from repro.core.genesys.heap import HostHeap                        # noqa: E402
+from repro.core.genesys.fuse import _ReadMember, scatter_read_group  # noqa: E402
+from repro.core.genesys.syscalls import make_default_table          # noqa: E402
+from benchmarks.common import (emit, make_file, make_gsys, open_ro,  # noqa: E402
+                               trimmed_mean)
+
+FULL_SIZES = (4096, 65536)
+QUICK_SIZES = (4096,)
+SCATTER_FULL = (128, 256)
+SCATTER_QUICK = (256,)
+SCATTER_BYTES = 64          # the paper's per-work-item coalescing grain
+COPY_CALLS = 256
+COPY_BYTES = 4096
+# the data-plane copy paths SyscallTable.copies meters; "register" is
+# excluded: an explicit register_bytes copy-in is the caller importing
+# bytes INTO the plane, identical on both heaps
+DATA_PATHS = ("resolve", "scatter", "gather", "reply")
+
+
+def _data_bytes(table) -> int:
+    snap = table.copies.snapshot()
+    return sum(int(snap.get(p, 0)) for p in DATA_PATHS)
+
+
+# ------------------------------------------------- dispatch hot loop (A) ----
+
+def _dispatch_hot_loop(sizes, repeats, ratios) -> None:
+    """fig8's pread hot loop at the dispatch funnel: arena vs legacy."""
+    path = make_file((max(sizes) * 32) + (1 << 16))
+    g_arena = make_gsys(n_workers=1)
+    g_legacy = make_gsys(n_workers=1, arena=False)
+    try:
+        runs = []
+        for g in (g_arena, g_legacy):
+            fd = open_ro(g, path)
+            runs.append((g.executor.dispatch_call, fd, g))
+        for nb in sizes:
+            iters = max(200, (1 << 21) // nb)
+            sides = []
+            for d, fd, g in runs:
+                h = g.heap.new_buffer(nb)
+                calls = [(fd, h, nb, (i % 32) * nb, 0) for i in range(iters)]
+                sides.append((d, calls))
+            for d, calls in sides:                                  # warm
+                for a in calls[:100]:
+                    assert d(Sys.PREAD64, a) == nb
+            avs, lvs = [], []
+            for _ in range(repeats):
+                for d, calls in sides:
+                    t0 = time.monotonic()
+                    for a in calls:
+                        d(Sys.PREAD64, a)
+                    dt = (time.monotonic() - t0) / iters
+                    (avs if d is sides[0][0] else lvs).append(dt)
+            key = f"dispatch_pread_{nb}"
+            ratios[key] = trimmed_mean([l / a for a, l in zip(avs, lvs)])
+            emit(f"fig15/{key}_arena", min(avs) * 1e6,
+                 f"{1.0 / min(avs):.0f}_calls_per_s")
+            emit(f"fig15/{key}_legacy", min(lvs) * 1e6,
+                 f"{1.0 / min(lvs):.0f}_calls_per_s")
+            emit(f"fig15/{key}_speedup", ratios[key],
+                 "x_arena_over_legacy_trimmed")
+        # ECHO parity: no buffer in the loop, so arena must cost nothing
+        evs = {0: [], 1: []}
+        for _ in range(repeats):
+            for i, (d, fd, g) in enumerate(runs):
+                t0 = time.monotonic()
+                for _ in range(2000):
+                    d(Sys.ECHO, (7,))
+                evs[i].append((time.monotonic() - t0) / 2000)
+        ratios["dispatch_echo"] = trimmed_mean(
+            [l / a for a, l in zip(evs[0], evs[1])])
+        emit("fig15/dispatch_echo_parity", ratios["dispatch_echo"],
+             "x_arena_over_legacy_reported_not_gated")
+        for _, fd, g in runs:
+            g.call(Sys.CLOSE, fd)
+        os.unlink(path)
+    finally:
+        g_arena.shutdown()
+        g_legacy.shutdown()
+
+
+# ------------------------------------------------- fused scatter-back (B) ----
+
+def _scatter_group(members_counts, repeats, ratios) -> None:
+    """scatter_read_group: arena vectorized vs dict-heap serial loop."""
+    for k in members_counts:
+        arena = HostArena(segment_bytes=1 << 22)
+        heap = HostHeap()
+        t_arena = make_default_table(heap=arena)
+        t_heap = make_default_table(heap=heap)
+        ah = [arena.carve(SCATTER_BYTES) for _ in range(k)]
+        hh = [heap.register_bytes(np.zeros(SCATTER_BYTES, dtype=np.uint8))
+              for _ in range(k)]
+        rng = np.random.default_rng(0)
+        scratch = rng.integers(0, 256, k * SCATTER_BYTES, dtype=np.uint8)
+        lo, end = 0, k * SCATTER_BYTES
+        mk = lambda hs: [_ReadMember(i, h, SCATTER_BYTES, i * SCATTER_BYTES,
+                                     0, 0) for i, h in enumerate(hs)]
+        m_arena, m_heap = mk(ah), mk(hh)
+        rets = [0] * k
+        rounds = max(3, 2000 // k)
+        sides = [(t_arena, arena, m_arena, []), (t_heap, heap, m_heap, [])]
+        for table, hp, members, _ in sides:                         # warm
+            scatter_read_group(table, scratch, lo, end, members, rets)
+            assert rets == [SCATTER_BYTES] * k
+            assert (np.asarray(hp.resolve(members[1].buf))
+                    == scratch[SCATTER_BYTES:2 * SCATTER_BYTES]).all()
+        for _ in range(repeats):
+            for table, _, members, ts in sides:
+                t0 = time.monotonic()
+                for _ in range(rounds):
+                    scatter_read_group(table, scratch, lo, end, members,
+                                       rets)
+                ts.append((time.monotonic() - t0) / rounds)
+        avs, hvs = sides[0][3], sides[1][3]
+        key = f"scatter_k{k}"
+        ratios[key] = trimmed_mean([h / a for a, h in zip(avs, hvs)])
+        emit(f"fig15/{key}_arena_vec", min(avs) * 1e6,
+             f"{k}x{SCATTER_BYTES}B_members")
+        emit(f"fig15/{key}_heap_serial", min(hvs) * 1e6,
+             f"{k}x{SCATTER_BYTES}B_members")
+        emit(f"fig15/{key}_speedup", ratios[key],
+             "x_vector_over_serial_trimmed")
+
+
+# ------------------------------------------------- bytes copied per call (C) -
+
+def _bytes_copied(ratios) -> None:
+    """Identical pread workload, both heaps; judge the copy meters."""
+    path = make_file(COPY_CALLS * COPY_BYTES)
+    per_call = {}
+    for tag, kw in (("arena", {}), ("legacy", {"arena": False})):
+        g = make_gsys(n_workers=1, **kw)
+        try:
+            fd = open_ro(g, path)
+            h = g.heap.new_buffer(COPY_BYTES)
+            before = _data_bytes(g.table)
+            for i in range(COPY_CALLS):
+                assert g.call(Sys.PREAD64, fd, h, COPY_BYTES,
+                              i * COPY_BYTES, 0) == COPY_BYTES
+            per_call[tag] = (_data_bytes(g.table) - before) / COPY_CALLS
+            g.call(Sys.CLOSE, fd)
+        finally:
+            g.shutdown()
+    os.unlink(path)
+    legacy = max(per_call["legacy"], 1.0)
+    ratios["bytes_copied_per_call"] = per_call["arena"] / legacy
+    emit("fig15/bytes_per_call_arena", per_call["arena"],
+         f"{COPY_BYTES}B_preads")
+    emit("fig15/bytes_per_call_legacy", per_call["legacy"],
+         f"{COPY_BYTES}B_preads")
+    emit("fig15/bytes_copied_ratio", ratios["bytes_copied_per_call"],
+         "x_arena_over_legacy")
+
+
+# ------------------------------------------------- CI copy-budget tripwire ---
+
+def check_echo_budget(budget_bytes_per_call: float = 8.0) -> int:
+    """Run an echo + in-place pread workload on the DEFAULT config and
+    fail if the data-path bytes-copied per call exceeds the budget —
+    the CI tripwire that keeps the zero-copy plane zero-copy."""
+    g = make_gsys(n_workers=1)
+    try:
+        path = make_file(COPY_CALLS * COPY_BYTES)
+        fd = open_ro(g, path)
+        h = g.heap.new_buffer(COPY_BYTES)
+        before = _data_bytes(g.table)
+        calls = 0
+        for i in range(COPY_CALLS):
+            assert g.call(Sys.ECHO, i) == i
+            assert g.call(Sys.PREAD64, fd, h, COPY_BYTES,
+                          i * COPY_BYTES, 0) == COPY_BYTES
+            calls += 2
+        per_call = (_data_bytes(g.table) - before) / calls
+        g.call(Sys.CLOSE, fd)
+        os.unlink(path)
+    finally:
+        g.shutdown()
+    emit("fig15/echo_budget_bytes_per_call", per_call,
+         f"budget_{budget_bytes_per_call}")
+    if per_call > budget_bytes_per_call:
+        print(f"# FAIL: data-path copies = {per_call:.1f} B/call, budget "
+              f"{budget_bytes_per_call:.1f} — the zero-copy plane is "
+              f"copying again", flush=True)
+        return 1
+    print(f"# copy budget OK: {per_call:.1f} B/call "
+          f"<= {budget_bytes_per_call:.1f}", flush=True)
+    return 0
+
+
+def run(quick: bool = False) -> dict[str, float]:
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    repeats = 7 if quick else 9
+    ratios: dict[str, float] = {}
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)
+    try:
+        _dispatch_hot_loop(sizes, repeats, ratios)
+        _scatter_group(SCATTER_QUICK if quick else SCATTER_FULL, repeats,
+                       ratios)
+        _bytes_copied(ratios)
+    finally:
+        sys.setswitchinterval(old_switch)
+    return ratios
+
+
+def main(argv=None) -> int:
+    argv = list(argv if argv is not None else sys.argv[1:])
+    if "--check-echo-budget" in argv:
+        budget = 8.0
+        if "--budget-bytes-per-call" in argv:
+            budget = float(argv[argv.index("--budget-bytes-per-call") + 1])
+        return check_echo_budget(budget)
+    quick = "--quick" in argv
+    out = None
+    if "--out" in argv:
+        out = argv[argv.index("--out") + 1]
+    t0 = time.monotonic()
+    ratios = run(quick=quick)
+    print(f"# fig15 done in {time.monotonic() - t0:.1f}s", flush=True)
+    ok = True
+    bad = {k: round(v, 2) for k, v in ratios.items()
+           if k.startswith("dispatch_pread_") and v < 1.3}
+    if bad:
+        print(f"# FAIL: arena dispatch speedup < 1.3x: {bad}", flush=True)
+        ok = False
+    sc = ratios.get(f"scatter_k{max(SCATTER_QUICK)}", 0.0)
+    if sc < 1.5:
+        print(f"# FAIL: vectorized scatter-back = {sc:.2f}x serial at "
+              f"{max(SCATTER_QUICK)} members (< 1.5x)", flush=True)
+        ok = False
+    bc = ratios.get("bytes_copied_per_call", 1.0)
+    if bc > 0.1:
+        print(f"# FAIL: arena copies {bc:.2f}x the legacy bytes per call "
+              f"(> 0.1x) — completions are not landing in place", flush=True)
+        ok = False
+    if ok:
+        gated = {k: round(v, 2) for k, v in ratios.items()}
+        print(f"# zerocopy gate OK: {gated}", flush=True)
+    if out:
+        with open(out, "w") as f:
+            json.dump({"fig": "fig15_zerocopy", "ok": ok,
+                       "ratios": {k: round(v, 4) for k, v in ratios.items()},
+                       "gates": {"dispatch_pread": 1.3, "scatter": 1.5,
+                                 "bytes_copied_ratio": 0.1}}, f, indent=2)
+            f.write("\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,7 @@ def main() -> None:
                             fig5_granularity, fig6_ordering, fig7_coalescing,
                             fig8_uring, fig9_qos, fig10_fuse, fig11_telemetry,
                             fig12_serving, fig13_metrics, fig14_admission,
-                            roofline_report)
+                            fig15_zerocopy, roofline_report)
     suites = [
         ("fig5_granularity", fig5_granularity.run),
         ("fig6_ordering", fig6_ordering.run),
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig12_serving", fig12_serving.run),
         ("fig13_metrics", fig13_metrics.run),
         ("fig14_admission", fig14_admission.run),
+        ("fig15_zerocopy", fig15_zerocopy.run),
         ("case_storage", case_storage.run),
         ("case_memory", case_memory.run),
         ("case_network", case_network.run),

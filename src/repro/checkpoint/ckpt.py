@@ -47,17 +47,22 @@ class CheckpointManager:
         step_dir = self.dir / f"step_{step:08d}"
         step_dir.mkdir(parents=True, exist_ok=True)
         manifest = {"step": step, "leaves": []}
+        handles = []          # payload extents live until the drain barrier
         for i, leaf in enumerate(leaves):
             arr = np.asarray(leaf)
             path = step_dir / f"leaf_{i:05d}.bin"
             ph = self.gsys.heap.register_bytes(str(path).encode())
             fd = self.gsys.call(Sys.OPEN, ph,
                                 os.O_CREAT | os.O_WRONLY | os.O_TRUNC, 0o644)
-            data = arr.tobytes()
-            bh = self.gsys.heap.register(
-                np.frombuffer(data, dtype=np.uint8).copy())
+            self.gsys.heap.release(ph)
+            # ONE staging copy: the leaf's bytes land straight in an arena
+            # extent (no tobytes + frombuffer + .copy() triple), and the
+            # pwrite goes out zero-copy off the extent
+            flat = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+            bh = self.gsys.heap.register_bytes(flat)
+            handles.append(bh)
             # relaxed-producer non-blocking pwrite (one slot per leaf)
-            self.gsys.call(Sys.PWRITE64, fd, bh, len(data), 0,
+            self.gsys.call(Sys.PWRITE64, fd, bh, flat.size, 0,
                            blocking=False)
             self.gsys.call(Sys.CLOSE, fd, blocking=False)
             manifest["leaves"].append({
@@ -65,9 +70,11 @@ class CheckpointManager:
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
             })
-            self.stats["bytes"] += len(data)
+            self.stats["bytes"] += flat.size
         # §8.3 completion barrier, then atomic manifest commit
         self.gsys.drain()
+        for bh in handles:    # writes are committed: extents go home
+            self.gsys.heap.release(bh)
         tmp = step_dir / ".manifest.tmp"
         tmp.write_text(json.dumps(manifest))
         os.replace(tmp, step_dir / "manifest.json")
@@ -112,12 +119,16 @@ class CheckpointManager:
             nbytes = os.path.getsize(path)
             ph = self.gsys.heap.register_bytes(str(path).encode())
             fd = self.gsys.call(Sys.OPEN, ph, os.O_RDONLY, 0)
+            self.gsys.heap.release(ph)
             bh = self.gsys.heap.new_buffer(nbytes)
             n = self.gsys.call(Sys.PREAD64, fd, bh, nbytes, 0)
             assert n == nbytes, (path, n, nbytes)
             self.gsys.call(Sys.CLOSE, fd)
+            # copy BEFORE releasing: jnp.asarray / device_put may alias
+            # host memory on CPU backends, and a released arena extent can
+            # be re-carved — the leaf must own its bytes
             arr = np.asarray(self.gsys.heap.resolve(bh)).view(
-                np.dtype(meta["dtype"])).reshape(meta["shape"])
+                np.dtype(meta["dtype"])).reshape(meta["shape"]).copy()
             self.gsys.heap.release(bh)
             if shard_leaves is not None:
                 out.append(jax.device_put(arr, shard_leaves[i]))

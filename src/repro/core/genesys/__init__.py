@@ -131,6 +131,40 @@ errnos (EAGAIN / EINTR) are retried with bounded exponential backoff
 ``digest()`` is bit-reproducible across runs for a fixed seed, making
 overload/fault drills replayable in CI.
 
+Zero-copy arena (``arena.py``): the default data plane. Every tenant
+buffer is carved from one backing uint8 arena
+(:class:`~repro.core.genesys.arena.HostArena`, the default
+``Genesys.heap`` unless ``GenesysConfig(arena=False)``), registered at
+carve time, and addressed by a generation-tagged handle that fits the
+slot ABI's u64 argument words. ``resolve()`` collapses to one
+bounds-checked slice; completions land **in place** (``preadv`` /
+``recvfrom_into`` straight into the caller's extent, ``pwrite`` /
+``sendto`` straight off it); fused reads scatter from an arena scratch
+extent with one vectorized strided store per segment; and the serving
+reply fanout sends off extents instead of ``tobytes()`` copies. The
+residual marshalling is accounted per path and per tenant
+(``telemetry()["copies"]``, ``genesys_bytes_copied_total``). Calling
+convention for the buffer argument word:
+
+====================  ==========================  =======================
+buffer argument       syscalls                    resolved by
+====================  ==========================  =======================
+arena handle          PREAD64 / PWRITE64 /        ``heap.view(h)`` — one
+(``ARENA_BIT`` set)   RECVFROM / SENDTO / READ /  bounds-checked slice of
+                      WRITE / MMAP                the backing arena
+foreign handle        same                        legacy dict lookup
+(small int)                                       (``HostHeap`` shim)
+fixed-table index     PREAD64_FIXED /             ``table.fixed(idx)`` —
+(``register_fixed``)  PWRITE64_FIXED /            pre-pinned ndarray, no
+                      RECVFROM_FIXED /            heap traffic at all
+                      SENDTO_FIXED
+====================  ==========================  =======================
+
+Arena handles are never revived: ``release`` bumps the extent's
+generation, so a straggling call that outlives its buffer resolves dead
+(-EIO) instead of touching a re-carved extent. ``release`` is
+idempotent on every heap implementation.
+
 Serving (``repro.serving``): the paper's echo server grown into a model
 server whose data plane is genesys syscalls end to end. Network I/O is
 RECVFROM/SENDTO on tenant rings; the KV cache is a **paged pool**
@@ -156,9 +190,12 @@ from repro.core.genesys.area import (
 )
 from repro.core.genesys.completion import Completion, CompletionQueue
 from repro.core.genesys.executor import Executor, ExecutorStats, RetryPolicy
+from repro.core.genesys.arena import HostArena
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
-from repro.core.genesys.syscalls import Sys, SyscallTable, make_default_table
+from repro.core.genesys.syscalls import (
+    CopyStats, Sys, SyscallTable, make_default_table,
+)
 from repro.core.genesys.fuse import Coalescer, FuseStats
 from repro.core.genesys.sched import (
     Deadline, Policy, PolicyEngine, PollerGroup, QosReject, RingPoller,
@@ -185,8 +222,9 @@ __all__ = [
     "GroupSpec",
     "SyscallArea", "SlotState", "SLOT_DTYPE", "SLOT_BYTES",
     "Completion", "CompletionQueue",
-    "Executor", "ExecutorStats", "RetryPolicy", "HostHeap", "MemoryPool",
-    "Sys", "SyscallTable", "make_default_table",
+    "Executor", "ExecutorStats", "RetryPolicy",
+    "HostArena", "HostHeap", "MemoryPool",
+    "CopyStats", "Sys", "SyscallTable", "make_default_table",
     "RingFull", "RingPoller", "RingStats", "SyscallRing",
     "Coalescer", "FuseStats",
     "Deadline", "Policy", "PolicyEngine", "PollerGroup", "QosReject",

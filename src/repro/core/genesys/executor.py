@@ -229,6 +229,9 @@ class Executor:
         transient -EAGAIN on *any* path consumes the same retry budget
         instead of surfacing straight to the caller."""
         sysno = int(sysno)
+        # per-tenant bytes-copied attribution rides worker TLS: handlers
+        # call note_copy() without owner plumbed through every signature
+        self.table._copy_tls.owner = owner
         plan, rp = self.fault_plan, self.retry
         attempt = 0
         while True:

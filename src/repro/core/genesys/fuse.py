@@ -10,13 +10,25 @@ own host syscall. This module goes one step further — GPUstore-style
   * **read-range fusion** — adjacent/overlapping ``PREAD64`` /
     ``PREAD64_FIXED`` ranges on the same fd become ONE large pread into a
     scratch buffer; the bytes are scattered back to each member's own
-    destination buffer (numpy slice copies) and each member's retval is
-    reconstructed exactly — a short read (EOF inside the merged span)
-    splits across members precisely as the unfused calls would have
-    returned;
+    destination buffer and each member's retval is reconstructed exactly —
+    a short read (EOF inside the merged span) splits across members
+    precisely as the unfused calls would have returned. When the data
+    plane is the registered arena, the scratch is an arena extent (the
+    merged pread lands via ``preadv``, zero-copy) and the scatter-back is
+    ONE vectorized fancy-index store per backing segment instead of a
+    per-member python copy loop (:func:`scatter_read_group`);
   * **read dedup** — identical concurrent ranges collapse into the
     merged span for free (they are, by definition, overlapping), so N
     readers of one hot block cost one kernel crossing;
+  * **write-range fusion** — strictly adjacent ``PWRITE64`` /
+    ``PWRITE64_FIXED`` ranges on the same fd gather into one scratch
+    extent and issue as ONE pwrite (the gather-side fusion the sharded-
+    checkpoint roadmap item needed). Write ordering rules are explicit
+    and conservative: two writes on the same fd whose ranges overlap
+    anywhere NEVER merge (the result is submission-order-dependent;
+    every write on that fd passes through serially), gaps split runs,
+    and writes never fuse when the same bundle reads/plain-writes/closes
+    that fd;
   * **mmap batching** — same-size-class ``MMAP`` allocations in one
     bundle are carved by :meth:`MemoryPool.mmap_many` under a single pool
     lock round, one address per member.
@@ -27,12 +39,16 @@ Semantics: fusion is only legal under the paper's *weak ordering* (§8.3
 — exactly what ring submissions are): members of a fused group complete
 together, so intra-bundle completion order is not submission order.
 Retvals and destination-buffer contents are bit-exact with the unfused
-path (property-tested against an oracle in tests/test_fuse.py): the
-scatter writes members in submission order (aliased destinations keep
-last-write-wins), and reads on an fd that the same bundle also
-closes/writes are excluded from fusion so they keep their serial
-position. Errors from a merged read (bad fd, etc.) propagate to every
-member, matching what each unfused call would have seen.
+path (property-tested against an oracle in tests/test_fuse.py and
+tests/test_arena.py): the scatter writes members in submission order
+(aliased destinations keep last-write-wins — the vectorized store is
+only taken when destinations are disjoint, because numpy's duplicate-
+index assignment order is unspecified), and reads/writes on an fd the
+same bundle also closes/writes/reads are excluded from fusion so they
+keep their serial position. Errors from a merged dispatch (bad fd, etc.)
+propagate to every member, matching what each unfused call would have
+seen; a member whose own buffer is dead fails alone (-EIO), without
+dragging the group down.
 
 Wiring: a :class:`Coalescer` hangs off a :class:`SyscallRing` (``fuse=``
 knob; per tenant via ``Genesys.tenant(name, fuse=True)`` or globally via
@@ -44,6 +60,7 @@ direct ``process_pending()`` callers fuse identically.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 
@@ -53,6 +70,16 @@ from repro.core.genesys.trace import (Counters, EV_COMPLETE, EV_DISPATCH,
 
 _U64 = 0xFFFFFFFFFFFFFFFF
 
+# vectorized-scatter heuristics: a fancy-index store pays O(total/8) index
+# arithmetic (the store runs on uint64 views, 8 bytes per index op), which
+# beats the per-member python loop only when members are many and small —
+# few/huge members keep the slice-copy loop, whose memcpy wins past ~0.5 KiB.
+# The break-even is measured: qualification is a fixed ~50us of small
+# array ops, amortized only past ~64 members; below that the serial loop
+# always wins, so the vector path refuses to engage.
+_VEC_MIN_MEMBERS = 64
+_VEC_MAX_MEMBER = 512
+
 
 @dataclass
 class FuseStats:
@@ -61,42 +88,68 @@ class FuseStats:
     calls_in: int = 0           # member calls inspected
     fused_calls: int = 0        # members that rode a merged dispatch
     read_groups: int = 0        # merged preads issued
+    write_groups: int = 0       # merged pwrites issued
     mmap_groups: int = 0        # batched mmap carves issued
     deduped: int = 0            # members whose exact range repeated another
     dispatches_saved: int = 0   # calls_in-equivalents that never dispatched
     bytes_merged: int = 0       # bytes fetched by merged reads
+    bytes_gathered: int = 0     # bytes staged by merged writes
+    vector_scatters: int = 0    # scatter-backs that took the fancy-index path
 
 
-class _ReadMember:
-    """One fusable pread: its bundle index + decoded args."""
+class _ReadMember(NamedTuple):
+    """One fusable pread: its bundle index + decoded args. A NamedTuple
+    (not __slots__) so ``np.array(members)`` converts a whole group to
+    int64 columns in one C pass — the vectorized scatter's qualification
+    would otherwise pay a per-member attribute loop that costs as much as
+    the copies it saves."""
 
-    __slots__ = ("idx", "buf", "count", "offset", "dst_off", "fixed")
+    idx: int
+    buf: int                    # heap handle or fixed-buffer index
+    count: int
+    offset: int
+    dst_off: int
+    fixed: int                  # 0/1 (int so the row is homogeneous)
 
-    def __init__(self, idx, buf, count, offset, dst_off, fixed):
-        self.idx = idx
-        self.buf = buf              # heap handle or fixed-buffer index
-        self.count = count
-        self.offset = offset
-        self.dst_off = dst_off
-        self.fixed = fixed
+
+class _WriteMember(NamedTuple):
+    """One fusable pwrite: its bundle index + decoded args."""
+
+    idx: int
+    buf: int                    # heap handle or fixed-buffer index
+    count: int
+    offset: int
+    src_off: int
+    fixed: int                  # 0/1
 
 
 class Coalescer:
     """Fusion pre-pass for popped ring bundles (see module docstring).
 
-    ``max_span`` bounds a merged read's byte span (one fused pread never
-    grows past it); ``min_group`` is the smallest member count worth a
-    merged dispatch (singletons always pass through).
+    ``max_span`` bounds a merged dispatch's byte span (one fused pread/
+    pwrite never grows past it); ``min_group`` is the smallest member
+    count worth a merged dispatch (singletons always pass through).
     """
 
     FUSABLE_READS = frozenset((int(Sys.PREAD64), int(Sys.PREAD64_FIXED)))
-    _FUSABLE_ALL = FUSABLE_READS | {int(Sys.MMAP)}
-    # same-fd ops that make hoisting a merged read unsafe: a close would
-    # turn still-valid reads into -EBADF, a write would let earlier-
+    FUSABLE_WRITES = frozenset((int(Sys.PWRITE64), int(Sys.PWRITE64_FIXED)))
+    _FUSABLE_ALL = FUSABLE_READS | FUSABLE_WRITES | {int(Sys.MMAP)}
+    # same-fd ops that make hoisting a merged READ unsafe: a close would
+    # turn still-valid reads into -EBADF, any write would let earlier-
     # submitted reads observe later bytes. Reads on such fds stay on the
     # serial passthrough path.
     _FD_CONFLICTS = frozenset((int(Sys.CLOSE), int(Sys.WRITE),
-                               int(Sys.PWRITE64)))
+                               int(Sys.PWRITE64), int(Sys.PWRITE64_FIXED)))
+    # same-fd ops that make hoisting a merged WRITE unsafe: the mirror
+    # image — a read submitted before/after a write must keep its serial
+    # position relative to it, and a close must still kill later writes
+    _WR_CONFLICTS = frozenset((int(Sys.CLOSE), int(Sys.WRITE),
+                               int(Sys.READ), int(Sys.PREAD64),
+                               int(Sys.PREAD64_FIXED)))
+    # non-fusable sysnos that must ride the candidate scan so their fd can
+    # veto fusion (fusable sysnos are scanned anyway)
+    _VETO_SYSNOS = frozenset((int(Sys.CLOSE), int(Sys.WRITE),
+                              int(Sys.READ)))
 
     def __init__(self, *, max_span: int = 8 << 20, min_group: int = 2):
         self.max_span = int(max_span)
@@ -121,7 +174,7 @@ class Coalescer:
         # pre-scan on the sysnos the SQEs already carry — no slot touch;
         # conflicting same-fd ops ride along so their fd can veto fusion
         cand = [i for i in range(n) if entries[i][3] in self._FUSABLE_ALL
-                or entries[i][3] in self._FD_CONFLICTS]
+                or entries[i][3] in self._VETO_SYSNOS]
         n_fusable = sum(1 for i in cand
                         if entries[i][3] in self._FUSABLE_ALL)
         if n_fusable < self.min_group:
@@ -131,10 +184,14 @@ class Coalescer:
         slot_arr = np.fromiter((entries[i][0] for i in cand),
                                dtype=np.int64, count=len(cand))
         args = ring.area.slots["args"][slot_arr].tolist()
-        conflict_fds = {a[0] for i, a in zip(cand, args)
+        rd_conflicts = {a[0] for i, a in zip(cand, args)
                         if entries[i][3] in self._FD_CONFLICTS}
+        wr_conflicts = {a[0] for i, a in zip(cand, args)
+                        if entries[i][3] in self._WR_CONFLICTS}
         pread_fixed = int(Sys.PREAD64_FIXED)
+        pwrite_fixed = int(Sys.PWRITE64_FIXED)
         reads: dict[int, list[_ReadMember]] = {}    # fd -> members
+        writes: dict[int, list[_WriteMember]] = {}  # fd -> members
         mmaps: dict[int, list[int]] = {}            # size class -> indices
         fusable = 0
         for i, a in zip(cand, args):
@@ -144,25 +201,34 @@ class Coalescer:
                     mmaps.setdefault(_size_class(a[1]), []).append(i)
                     fusable += 1
             elif sysno in self.FUSABLE_READS and a[2] > 0 \
-                    and a[0] not in conflict_fds:   # pread(0) / hazardous
+                    and a[0] not in rd_conflicts:   # pread(0) / hazardous
                 m = _ReadMember(i, a[1], a[2], a[3], a[4],  # fd: pass thru
                                 sysno == pread_fixed)
                 reads.setdefault(a[0], []).append(m)
                 fusable += 1
+            elif sysno in self.FUSABLE_WRITES and a[2] > 0 \
+                    and a[0] not in wr_conflicts:
+                m = _WriteMember(i, a[1], a[2], a[3], a[4],
+                                 sysno == pwrite_fixed)
+                writes.setdefault(a[0], []).append(m)
+                fusable += 1
         if fusable < self.min_group:
             return self._pass_through(ring, entries)
         read_groups, deduped = self._plan_reads(reads)
+        write_groups = self._plan_writes(writes)
         mmap_groups = [(cls, idxs) for cls, idxs in mmaps.items()
                        if len(idxs) >= self.min_group]
-        if not read_groups and not mmap_groups:
+        if not read_groups and not write_groups and not mmap_groups:
             return self._pass_through(ring, entries)
         grouped = set()
         for _fd, _lo, _hi, members in read_groups:
             grouped.update(m.idx for m in members)
+        for _fd, _lo, _hi, members in write_groups:
+            grouped.update(m.idx for m in members)
         for _cls, idxs in mmap_groups:
             grouped.update(idxs)
         passthrough = [i for i in range(n) if i not in grouped]
-        n_groups = len(read_groups) + len(mmap_groups)
+        n_groups = len(read_groups) + len(write_groups) + len(mmap_groups)
         with self.counters.lock:
             st = self.stats
             st.bundles += 1
@@ -170,10 +236,13 @@ class Coalescer:
             st.calls_in += n
             st.fused_calls += len(grouped)
             st.read_groups += len(read_groups)
+            st.write_groups += len(write_groups)
             st.mmap_groups += len(mmap_groups)
             st.deduped += deduped
             st.dispatches_saved += len(grouped) - n_groups
             st.bytes_merged += sum(hi - lo for _f, lo, hi, _m in read_groups)
+            st.bytes_gathered += sum(hi - lo
+                                     for _f, lo, hi, _m in write_groups)
             gid0 = self._next_gid
             self._next_gid += n_groups
         tr = ring.trace
@@ -182,7 +251,7 @@ class Coalescer:
             # with its merged-group id (aux), so the exporter can render
             # the fused span with its member list
             gid = gid0
-            for _fd, _lo, _hi, members in read_groups:
+            for _fd, _lo, _hi, members in read_groups + write_groups:
                 tr.rec_block(EV_FUSE_MERGE,
                              [entries[m.idx][3] for m in members],
                              [entries[m.idx][1] for m in members], aux=gid)
@@ -191,8 +260,8 @@ class Coalescer:
                 tr.rec_block(EV_FUSE_MERGE, [entries[i][3] for i in idxs],
                              [entries[i][1] for i in idxs], aux=gid)
                 gid += 1
-        return _FusedBatch(ring, entries, read_groups, mmap_groups,
-                           passthrough)
+        return _FusedBatch(ring, entries, read_groups, write_groups,
+                           mmap_groups, passthrough)
 
     def _plan_reads(self, reads):
         """Merge each fd's ranges into maximal adjacent/overlapping runs.
@@ -228,6 +297,43 @@ class Coalescer:
                 groups.append((fd, run[0].offset, run_end, run))
         return groups, deduped
 
+    def _plan_writes(self, writes):
+        """Merge each fd's write ranges into maximal STRICTLY-adjacent
+        runs: ``[(fd, lo, hi, members), ...]``.
+
+        Write-ordering rules (conservative by design):
+
+          * overlap anywhere on an fd disqualifies that entire fd — the
+            merged result of overlapping writes depends on submission
+            order, so all of that fd's writes keep their serial
+            passthrough positions (same-fd overlaps never merge);
+          * only strict adjacency merges (``m.offset == run_end``): a gap
+            would make the merged pwrite touch bytes no member owns;
+          * ``max_span`` bounds a run like the read planner.
+        """
+        groups = []
+        for fd, members in writes.items():
+            members.sort(key=lambda m: (m.offset, m.idx))
+            if any(b.offset < a.offset + a.count
+                   for a, b in zip(members, members[1:])):
+                continue        # order-dependent overlap: fd stays serial
+            run: list[_WriteMember] = []
+            run_end = -1
+            for m in members:
+                if run and m.offset == run_end \
+                        and m.offset + m.count - run[0].offset \
+                        <= self.max_span:
+                    run.append(m)
+                    run_end = m.offset + m.count
+                else:
+                    if len(run) >= self.min_group:
+                        groups.append((fd, run[0].offset, run_end, run))
+                    run = [m]
+                    run_end = m.offset + m.count
+            if len(run) >= self.min_group:
+                groups.append((fd, run[0].offset, run_end, run))
+        return groups
+
 
 def _size_class(length: int) -> int:
     """MMAP size class: page-rounded length (the pool's own rounding), so
@@ -236,20 +342,178 @@ def _size_class(length: int) -> int:
     return ((int(length) + PAGE - 1) // PAGE) * PAGE
 
 
+def scatter_read_group(table, scratch, lo, end, members, rets, owner=None,
+                       counters=None) -> None:
+    """Scatter merged-read bytes from ``scratch`` (covering ``[lo, ...)``,
+    valid up to file position ``end``) back into the members' buffers and
+    fill each member's exact retval.
+
+    Fast path: when every member's destination is a live, in-bounds,
+    non-fixed arena extent, destinations are mutually disjoint, and the
+    group shape favors it (>= ``_VEC_MIN_MEMBERS`` members, none larger
+    than ``_VEC_MAX_MEMBER``), the whole scatter is ONE fancy-index store
+    per backing segment — no per-member python copies. Any other shape
+    takes the seed-exact serial loop in submission order (which is what
+    gives aliased destinations last-write-wins, and a dead handle its
+    lone -EIO).
+    """
+    heap = table.heap
+    if _vector_scatter(table, heap, scratch, lo, end, members, rets, owner,
+                       counters):
+        return
+    # one heap lock round for every non-fixed destination buffer
+    dsts = heap.resolve_many(m.buf for m in members if not m.fixed)
+    copied = 0
+    # scatter in SUBMISSION order (members arrive offset-sorted from
+    # the range merge): when two members' destination regions alias,
+    # the last submitted write must win, exactly as the unfused
+    # serial dispatch would leave the buffer
+    for m in sorted(members, key=lambda m: m.idx):
+        # exact short-read split: an unfused pread(fd, count, offset)
+        # returns min(count, max(0, EOF - offset)) bytes
+        avail = min(m.count, max(0, end - m.offset))
+        rets[m.idx] = avail
+        if avail <= 0:
+            continue
+        try:
+            dst = table._fixed[m.buf] if m.fixed else dsts[m.buf]
+            start = m.offset - lo
+            np.asarray(dst)[m.dst_off:m.dst_off + avail] = \
+                scratch[start:start + avail]
+            copied += avail
+        except Exception:               # dead handle / bad index: the
+            rets[m.idx] = -5            # member alone sees -EIO
+    table.note_copy("scatter", copied, owner)
+
+
+def _vector_scatter(table, heap, scratch, lo, end, members, rets, owner,
+                    counters) -> bool:
+    """The fancy-index scatter; returns False when the group doesn't
+    qualify (caller falls back to the serial loop, which owns ALL the
+    edge-case semantics: aliasing, dead handles, out-of-bounds).
+
+    The store runs on ``uint64`` views — 8 bytes per index op — which is
+    what makes it beat the per-member memcpy loop (byte-grain fancy
+    indexing loses at any realistic member size). That needs every
+    destination start, source start, and length 8-byte divisible; arena
+    extents start 64B-aligned so pow2-sized members (the coalescing
+    regime's shape) qualify, and anything ragged (short read at EOF, odd
+    ``dst_off``) falls back to the serial loop."""
+    k = len(members)
+    if k < _VEC_MIN_MEMBERS:
+        return False
+    locate_batch = getattr(heap, "locate_batch", None)
+    segment = getattr(heap, "segment", None)
+    if locate_batch is None or segment is None:
+        return False
+    scratch = np.asarray(scratch)
+    # ONE flat C-level conversion of the whole group (members are
+    # NamedTuples), then array ops only — a per-member qualification loop
+    # would cost as much as the serial copies it saves
+    cols = np.fromiter((f for m in members for f in m), dtype=np.int64,
+                       count=k * 6).reshape(k, 6).T
+    idxs, bufs, counts, offsets, dst_off, fixed = cols
+    if fixed.any():
+        return False            # fixed members: serial owns the table path
+    # duplicate handles (read dedup / aliased destinations): numpy's
+    # duplicate-index assignment order is unspecified, so last-write-wins
+    # needs the serial loop. With k unique live handles the extents are
+    # mutually disjoint by construction — no overlap check needed beyond
+    # the per-extent bounds below.
+    bl = bufs.tolist()
+    if len(set(bl)) != k:
+        return False
+    loc = locate_batch(bufs)
+    if loc is None:
+        return False            # foreign/dead member: serial owns the -EIO
+    seg, off, cap = loc
+    avail = np.maximum(np.minimum(counts, end - offsets), 0)
+    amax = int(avail.max())
+    if amax > _VEC_MAX_MEMBER:
+        return False            # big member: the slice-copy memcpy wins
+    # bounds + sign in ONE reduction: bad iff dst_off < 0 or
+    # dst_off + avail > cap for any member
+    if int(np.minimum(dst_off, cap - dst_off - avail).min()) < 0:
+        return False            # out of bounds: serial owns the ValueError
+    rfill = avail               # per-member return values (pre-compression)
+    d0 = off + dst_off
+    s0 = offsets - lo
+    if amax <= 0:               # every member starts past EOF
+        total = 0
+        avail = avail[:0]
+    elif int(avail[-1]) <= 0:   # zero-avail tail (members are offset-
+        nz = avail > 0          # sorted, so zeros form a suffix)
+        seg, d0, s0, avail = seg[nz], d0[nz], s0[nz], avail[nz]
+        total = int(avail.sum())
+    else:
+        total = int(avail.sum())
+    if total:
+        # contiguity runs: sequentially carved same-class extents sit back
+        # to back in their segment, so the common serving/prefetch shape
+        # (N buffers carved at setup, adjacent file ranges) collapses the
+        # whole scatter into ~1 slice memcpy; a run needs BOTH sides
+        # contiguous
+        brk = np.flatnonzero((seg[1:] != seg[:-1])
+                             | (d0[1:] != d0[:-1] + avail[:-1])
+                             | (s0[1:] != s0[:-1] + avail[:-1]))
+        starts = np.concatenate(([0], brk + 1, [avail.size]))
+        if (starts.size - 1) * 4 <= avail.size:
+            cum = np.concatenate(([0], np.cumsum(avail)))
+            for i, j in zip(starts[:-1].tolist(), starts[1:].tolist()):
+                ln = int(cum[j] - cum[i])
+                d, s = int(d0[i]), int(s0[i])
+                segment(int(seg[i]))[d:d + ln] = scratch[s:s + ln]
+        elif not ((((d0 | s0 | avail) & 7) != 0).any() or scratch.size % 8
+                  or any(segment(s).size % 8 for s in set(seg.tolist()))):
+            # ragged but 8-aligned: one uint64-view fancy-index store per
+            # backing segment (word grain — byte-grain indexing loses to
+            # the memcpy loop at any realistic member size)
+            src64 = scratch.view(np.uint64)
+            for seg_i in set(seg.tolist()):
+                sel = seg == seg_i
+                lens = avail[sel] >> 3
+                dw = d0[sel] >> 3
+                sw = s0[sel] >> 3
+                tot = int(lens.sum())
+                # ragged index expansion: word j of the concatenation
+                # belongs to member i at (j - cum[i-1])
+                within = np.arange(tot, dtype=np.int64) \
+                    - np.repeat(np.cumsum(lens) - lens, lens)
+                segment(seg_i).view(np.uint64)[np.repeat(dw, lens)
+                                               + within] = \
+                    src64[np.repeat(sw, lens) + within]
+        else:
+            return False        # ragged and unaligned: serial loop
+    il = idxs.tolist()
+    rl = rfill.tolist()
+    i0 = il[0]
+    if il[-1] - i0 == k - 1 and il == list(range(i0, i0 + k)):
+        rets[i0:i0 + k] = rl    # adjacent submissions: one slice assign
+    else:
+        for i, a in zip(il, rl):
+            rets[i] = a
+    table.note_copy("scatter", total, owner)
+    if counters is not None:
+        counters.add(vector_scatters=1)
+    return True
+
+
 class _FusedBatch:
     """A popped bundle with a fusion plan; the executor worker runs
     :meth:`process` (same bundle protocol as ``_RingBatch``): claim all
     slots, run passthroughs serially, run each fused group as one
-    dispatch + scatter, retire all slots, resolve all futures — one lock
-    round per structure, exactly like the unfused batch."""
+    dispatch + scatter/gather, retire all slots, resolve all futures —
+    one lock round per structure, exactly like the unfused batch."""
 
-    __slots__ = ("ring", "entries", "read_groups", "mmap_groups",
-                 "passthrough")
+    __slots__ = ("ring", "entries", "read_groups", "write_groups",
+                 "mmap_groups", "passthrough")
 
-    def __init__(self, ring, entries, read_groups, mmap_groups, passthrough):
+    def __init__(self, ring, entries, read_groups, write_groups,
+                 mmap_groups, passthrough):
         self.ring = ring
         self.entries = entries
         self.read_groups = read_groups
+        self.write_groups = write_groups
         self.mmap_groups = mmap_groups
         self.passthrough = passthrough
 
@@ -258,12 +522,14 @@ class _FusedBatch:
 
     def qos_entries(self):
         """The scheduler-chargeable view: one entry per actual kernel
-        crossing. Each merged read/mmap group charges its FIRST member's
-        entry once (the whole group is one dispatch); passthrough members
-        charge individually — so WFQ bills fused tenants for crossings,
-        not for member counts."""
+        crossing. Each merged read/write/mmap group charges its FIRST
+        member's entry once (the whole group is one dispatch);
+        passthrough members charge individually — so WFQ bills fused
+        tenants for crossings, not for member counts."""
         charged = [self.entries[i] for i in self.passthrough]
         for _fd, _lo, _hi, members in self.read_groups:
+            charged.append(self.entries[members[0].idx])
+        for _fd, _lo, _hi, members in self.write_groups:
             charged.append(self.entries[members[0].idx])
         for _cls, idxs in self.mmap_groups:
             charged.append(self.entries[idxs[0]])
@@ -301,6 +567,8 @@ class _FusedBatch:
                 rets[i] = ex.dispatch_call(rec["sysno"], rec["args"], owner)
             for fd, lo, hi, members in self.read_groups:
                 self._run_read_group(ex, fd, lo, hi, members, rets)
+            for fd, lo, hi, members in self.write_groups:
+                self._run_write_group(ex, fd, lo, hi, members, rets)
             for cls, idxs in self.mmap_groups:
                 self._run_mmap_group(table, cls, idxs, rets)
             area.complete_many(slots, rets)
@@ -319,11 +587,23 @@ class _FusedBatch:
                     ex._idle.notify_all()
 
     # -- fused executors ---------------------------------------------------------
+    def _scratch(self, heap, total):
+        """A scratch buffer for one merged dispatch: an arena extent when
+        the data plane has one (the merged pread/pwrite then runs
+        zero-copy through the in-place handlers), else a registered
+        ndarray. Returns ``(handle, ndarray view)``; caller releases."""
+        carve = getattr(heap, "carve", None)
+        if carve is not None:
+            sh = carve(total)
+            return sh, heap.view(sh)
+        scratch = np.empty(total, dtype=np.uint8)
+        return heap.register(scratch), scratch
+
     def _run_read_group(self, ex, fd, lo, hi, members, rets) -> None:
         """One merged pread for the whole ``[lo, hi)`` run, scattered back.
 
         The merged read goes through the executor's dispatch funnel
-        (scratch heap buffer), so errno mapping, handler overrides, fault
+        (scratch arena extent), so errno mapping, handler overrides, fault
         injection, bounded retry, and dispatch stats stay uniform — the
         bundle just crosses the "kernel" once, and that one crossing is
         what a fault plan can hit (the whole group shares its fate, like
@@ -332,8 +612,7 @@ class _FusedBatch:
         table = ex.table
         heap = table.heap
         total = hi - lo
-        scratch = np.empty(total, dtype=np.uint8)   # scatter clamps to nread
-        sh = heap.register(scratch)
+        sh, scratch = self._scratch(heap, total)
         try:
             # dispatch_call nets non-OSError failures (e.g. OverflowError
             # on an out-of-C-range offset) to -EIO, same as the unfused
@@ -341,33 +620,71 @@ class _FusedBatch:
             nread = ex.dispatch_call(int(Sys.PREAD64),
                                      [fd, sh, total, lo, 0, 0],
                                      self.ring.owner)
+            if nread < 0:                   # merged error: every member
+                for m in members:           # sees what its own call would
+                    rets[m.idx] = nread
+                return
+            fuse = getattr(self.ring, "fuse", None)
+            scatter_read_group(table, scratch, lo, lo + nread, members,
+                               rets, self.ring.owner,
+                               fuse.counters if fuse is not None else None)
+        finally:
+            # release AFTER the scatter: an arena extent returned to the
+            # free list could be re-carved by another worker mid-scatter
+            heap.release(sh)
+
+    def _run_write_group(self, ex, fd, lo, hi, members, rets) -> None:
+        """One merged pwrite for the whole strictly-adjacent ``[lo, hi)``
+        run: gather member bytes into scratch, dispatch once, split the
+        written-byte count back across members as the exact prefix each
+        unfused pwrite would have reported. A gather failure (dead member
+        handle) demotes the whole group to serial per-member dispatch so
+        the healthy members still land and the dead one alone fails."""
+        table = ex.table
+        heap = table.heap
+        total = hi - lo
+        sh, scratch = self._scratch(heap, total)
+        try:
+            try:
+                for m in members:
+                    src = heap.view(m.buf) if not m.fixed else None
+                    if src is None:
+                        src = table._fixed[m.buf] if m.fixed \
+                            else heap.resolve(m.buf)
+                        src = np.asarray(src)
+                    seg = src[m.src_off:m.src_off + m.count]
+                    if getattr(seg, "size", len(seg)) != m.count:
+                        raise ValueError("short source")
+                    scratch[m.offset - lo:m.offset - lo + m.count] = seg
+            except Exception:
+                self._write_fallback(ex, fd, members, rets)
+                return
+            table.note_copy("gather", total, self.ring.owner)
+            w = ex.dispatch_call(int(Sys.PWRITE64),
+                                 [fd, sh, total, lo, 0, 0],
+                                 self.ring.owner)
+            if w < 0:                       # merged error: every member
+                for m in members:           # sees what its own call would
+                    rets[m.idx] = w
+                return
+            for m in members:
+                # short-write prefix split: bytes [lo, lo+w) landed, so a
+                # member's own pwrite would have written the overlap of
+                # its range with that prefix
+                rets[m.idx] = min(m.count, max(0, w - (m.offset - lo)))
         finally:
             heap.release(sh)
-        if nread < 0:                       # merged error: every member
-            for m in members:               # sees what its own call would
-                rets[m.idx] = nread
-            return
-        end = lo + nread                    # bytes that actually exist
-        # one heap lock round for every non-fixed destination buffer
-        dsts = heap.resolve_many(m.buf for m in members if not m.fixed)
-        # scatter in SUBMISSION order (members arrive offset-sorted from
-        # the range merge): when two members' destination regions alias,
-        # the last submitted write must win, exactly as the unfused
-        # serial dispatch would leave the buffer
+
+    def _write_fallback(self, ex, fd, members, rets) -> None:
+        """Serial per-member dispatch in submission order (the unfused
+        path, args reconstructed) — used when the gather can't stage the
+        group, so each member gets its own success/failure."""
+        plain, fixed = int(Sys.PWRITE64), int(Sys.PWRITE64_FIXED)
         for m in sorted(members, key=lambda m: m.idx):
-            # exact short-read split: an unfused pread(fd, count, offset)
-            # returns min(count, max(0, EOF - offset)) bytes
-            avail = min(m.count, max(0, end - m.offset))
-            rets[m.idx] = avail
-            if avail <= 0:
-                continue
-            try:
-                dst = table._fixed[m.buf] if m.fixed else dsts[m.buf]
-                start = m.offset - lo
-                np.asarray(dst)[m.dst_off:m.dst_off + avail] = \
-                    scratch[start:start + avail]
-            except Exception:               # dead handle / bad index: the
-                rets[m.idx] = -5            # member alone sees -EIO
+            rets[m.idx] = ex.dispatch_call(
+                fixed if m.fixed else plain,
+                [fd, m.buf, m.count, m.offset, m.src_off, 0],
+                self.ring.owner)
 
     def _run_mmap_group(self, table, cls, idxs, rets) -> None:
         """Same-size-class MMAPs: one pool lock round, one address each."""

@@ -6,11 +6,20 @@ are passed as *handles* into this registry instead: a handle is a u64 that
 fits a syscall arg slot and resolves, on the host side, to a numpy buffer or
 bytes object. This preserves the paper's calling convention (6 u64 args)
 without pretending CPython has shared-VA semantics.
+
+This dict-of-objects registry is the *legacy* data plane; the default is
+:class:`repro.core.genesys.arena.HostArena`, a subclass whose buffers are
+extents of one registered ``np.uint8`` arena (zero-copy in-place
+completions, lock-free resolve). ``HostHeap`` remains both the shim for
+foreign/bytes objects and the baseline the arena is benchmarked against
+(``benchmarks/fig15_zerocopy.py``).
 """
 from __future__ import annotations
 
 import threading
 from typing import Any
+
+import numpy as np
 
 
 class HostHeap:
@@ -40,15 +49,39 @@ class HostHeap:
                     for h in (int(x) for x in handles) if h in objs}
 
     def release(self, handle: int) -> None:
+        """Drop a handle. Idempotent by contract: releasing a dead (or
+        never-registered) handle is a no-op, so completion paths and
+        cleanup paths may both release without coordinating. Subclasses
+        must preserve this."""
         with self._lock:
             self._objs.pop(int(handle), None)
 
-    def register_bytes(self, data: bytes) -> int:
+    def register_bytes(self, data, path: str = "register") -> int:
+        """Register a private mutable copy of ``data`` (bytes-like or a
+        uint8 ndarray). ``path`` labels the marshalling copy for
+        bytes-copied accounting (used by the arena subclass; the dict
+        registry accepts and ignores it)."""
+        if isinstance(data, np.ndarray):
+            return self.register(data.reshape(-1).view(np.uint8).copy())
         return self.register(bytearray(data))
 
     def new_buffer(self, nbytes: int) -> int:
-        import numpy as np
         return self.register(np.zeros(int(nbytes), dtype=np.uint8))
+
+    def view(self, handle):
+        """Arena fast-path probe: a live arena extent's ndarray view, or
+        ``None``. The dict registry has no extents, so always ``None`` —
+        callers fall through to the legacy resolve/copy path."""
+        return None
+
+    def locate(self, handle):
+        """Arena extent descriptor ``(segment, offset, nbytes)`` or
+        ``None`` (see :meth:`view`)."""
+        return None
+
+    @staticmethod
+    def is_arena_handle(handle) -> bool:
+        return False
 
     def __len__(self) -> int:
         with self._lock:

@@ -88,6 +88,13 @@ class GenesysConfig:
     # genesys.metrics: windowed time-series history kept by the lazy
     # Genesys.metrics registry (one snapshot per tick)
     metrics_windows: int = 120
+    # genesys.arena: the zero-copy data plane. True (default) backs the
+    # heap with a HostArena — new_buffer/register_bytes hand out extents
+    # of registered uint8 segments, syscall completions land in place.
+    # False keeps the legacy dict-of-objects HostHeap (the benchmark
+    # baseline in benchmarks/fig15_zerocopy.py).
+    arena: bool = True
+    arena_segment_bytes: int = 1 << 20
 
 
 # ---------- int64 <-> (lo, hi) int32 packing ---------------------------------
@@ -180,9 +187,16 @@ class Genesys:
 
     def __init__(self, config: GenesysConfig = GenesysConfig()):
         self.config = config
-        self.heap = HostHeap()
+        if config.arena:
+            from repro.core.genesys.arena import HostArena
+            self.heap = HostArena(segment_bytes=config.arena_segment_bytes)
+        else:
+            self.heap = HostHeap()
         self.pool = MemoryPool()
         self.table: SyscallTable = make_default_table(self.heap, self.pool)
+        # register_bytes copy-ins count toward the table's bytes-copied
+        # metrics (per-path: register/reply/...)
+        self.heap.on_copy = self.table.note_copy
         self.area = SyscallArea(config.n_slots)
         self.executor = Executor(
             self.area, self.table,
@@ -360,6 +374,11 @@ class Genesys:
             "fuse": (ring.fuse.counters.snapshot()
                      if ring is not None and ring.fuse is not None else None),
             "sched": sched.counters.snapshot() if sched is not None else None,
+            # zero-copy data plane: marshalling bytes still copied, by
+            # path (trending to ~0 on arena workloads), + arena occupancy
+            "copies": self.table.copies.snapshot(),
+            "arena": (self.heap.arena_stats()
+                      if hasattr(self.heap, "arena_stats") else None),
             "tenants": {},
             "histograms": tracer.histograms() if tracer is not None else {},
             "trace": tracer.meta() if tracer is not None
@@ -453,6 +472,9 @@ class Genesys:
                        rate_limit=rate_limit, burst=burst, engine=self.engine,
                        deadline_us=deadline_us, coalesce_max=coalesce_max,
                        group=group)
+            # per-tenant buffer tracking (Tenant.new_buffer): extents are
+            # released when the tenant retires (close_tenant)
+            t.heap = self.heap
             self._sched_locked().add(ring, tenant=t)
             self._tenants[name] = t
             return t
@@ -476,15 +498,19 @@ class Genesys:
             pass
         self.executor.drain()              # partition slots must be home
         self.area.reclaim(t.area)
+        t.release_buffers()                # tracked arena extents go home
         self.engine.closed(t)              # drop per-tenant policy state
 
     # ------------- registered buffers (io_uring READ_FIXED analogue) ------------
     def register_buffers(self, handles) -> list[int]:
         """Pin heap handles into the syscall table's fixed-buffer index
         table. The returned indices are valid as the buffer argument of
-        ``Sys.PREAD64_FIXED`` / ``Sys.RECVFROM_FIXED``, whose handlers
-        index the table directly — no per-call HostHeap lock/dict hop on
-        the hot path (io_uring registered-buffer semantics)."""
+        ``Sys.PREAD64_FIXED`` / ``Sys.RECVFROM_FIXED`` and the gather-side
+        ``Sys.PWRITE64_FIXED`` / ``Sys.SENDTO_FIXED``, whose handlers
+        index the table directly — no per-call heap hop on the hot path
+        (io_uring registered-buffer semantics). Under the default arena
+        data plane this pins the extent's backing view, so the extent must
+        stay live (unreleased) while its index is in use."""
         return [self.table.register_fixed(self.heap.resolve(h))
                 for h in handles]
 

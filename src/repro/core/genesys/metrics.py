@@ -591,5 +591,12 @@ def install_genesys_collector(registry: MetricsRegistry, gsys) -> None:
         if pk and pk.get("prefix_queries"):
             registry.set("genesys_pagedkv_prefix_hit_rate",
                          pk["prefix_hits"] / max(1, pk["prefix_queries"]))
+        cp = t.get("copies") or {}
+        for path in ("resolve", "scatter", "gather", "reply", "register"):
+            registry.set("genesys_bytes_copied_total", cp.get(path, 0),
+                         kind="counter", path=path)
+        for tname, nb in (cp.get("per_tenant") or {}).items():
+            registry.set("genesys_tenant_bytes_copied_total", nb,
+                         kind="counter", tenant=str(tname))
 
     registry.register_collector(collect)

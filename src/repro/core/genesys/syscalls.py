@@ -7,11 +7,22 @@ real UDP sockets; memory against :class:`MemoryPool`), plus getrusage-style
 introspection (paper §1: 'getrusage can be adapted to return information
 about GPU resource usage').
 
-Buffer/string arguments are heap handles (see heap.py). Numbers follow
-x86_64 where one exists.
+Buffer/string arguments are heap handles (see heap.py / arena.py). Numbers
+follow x86_64 where one exists.
+
+Zero-copy completions: when the buffer argument is a live arena extent
+(``heap.view(h)`` is not ``None``), read-side handlers land bytes in place
+(``os.preadv`` / ``socket.recvfrom_into`` into the extent) and write-side
+handlers send from place (``os.pwrite`` / ``sendto`` straight off the
+extent's buffer protocol) — the completion IS the data delivery, with no
+intermediate bytes object. Foreign handles keep the seed copy path, and
+every marshalling copy that path still pays is metered through
+:meth:`SyscallTable.note_copy` into :attr:`SyscallTable.copies`
+(``genesys_bytes_copied_total``).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import socket
 import threading
@@ -23,6 +34,10 @@ import numpy as np
 from repro.core.genesys.heap import HostHeap
 from repro.core.genesys.memory_pool import MemoryPool
 from repro.core.genesys.trace import Counters
+
+# os.preadv/readv exist on every Linux we target; guard anyway so the
+# legacy copy path keeps the table importable elsewhere
+_HAS_PREADV = hasattr(os, "preadv")
 
 
 class Sys(IntEnum):
@@ -45,11 +60,15 @@ class Sys(IntEnum):
     # pure-overhead call (returns arg0): the echo microbenchmark floor for
     # the doorbell-vs-ring studies (benchmarks/fig8_uring.py)
     ECHO = 1000
-    # registered-buffer variants (io_uring READ_FIXED analogue): the buffer
+    # registered-buffer variants (io_uring *_FIXED analogue): the buffer
     # argument is an index into the table pinned by Genesys.register_buffers,
     # skipping the per-call HostHeap lock/dict resolve on the hot path
     PREAD64_FIXED = 1001
     RECVFROM_FIXED = 1002
+    # gather-side fixed variants (the fuse.py open item): write/send
+    # straight out of a pinned buffer, fusable by the Coalescer
+    PWRITE64_FIXED = 1003
+    SENDTO_FIXED = 1004
 
 
 # dispatch() is on every worker's hot path: resolve names without a per-call
@@ -57,6 +76,26 @@ class Sys(IntEnum):
 _SYS_NAMES = {int(s): s.name for s in Sys}
 
 Handler = Callable[..., int]
+
+
+@dataclasses.dataclass
+class CopyStats:
+    """Marshalling bytes the data plane still copies, by path. The
+    zero-copy refactor's success metric is these trending to ~0 on arena
+    workloads (ROADMAP: "bytes-copied-per-call counter trending to ~0").
+
+    Paths: ``resolve`` = per-call copy through a resolved heap object
+    (legacy pread/recvfrom/pwrite/sendto marshalling), ``scatter`` =
+    fused-read scratch -> member buffers, ``gather`` = member buffers ->
+    fused-write scratch, ``reply`` = serving reply payload staging,
+    ``register`` = generic register_bytes copy-ins."""
+    resolve: int = 0
+    scatter: int = 0
+    gather: int = 0
+    reply: int = 0
+    register: int = 0
+    events: int = 0
+    per_tenant: dict = dataclasses.field(default_factory=dict)
 
 
 class SyscallTable:
@@ -72,10 +111,31 @@ class SyscallTable:
         # stats discipline (one lock for mutation AND snapshot)
         self.counters = Counters({})
         self.stats: dict[str, int] = self.counters.stats
+        # bytes-copied accounting (genesys_bytes_copied_total); the owner
+        # for per-tenant attribution rides worker-thread TLS, set once per
+        # Executor.dispatch_call rather than threaded through every handler
+        self.copies = Counters(CopyStats())
+        self._copy_tls = threading.local()
         # registered buffers: append-only index table; reads are lock-free
         # (list indexing is atomic under the GIL), which is the whole point
         self._fixed: list = []
         self._fixed_lock = threading.Lock()
+
+    def note_copy(self, path: str, nbytes: int, owner=None) -> None:
+        """Count ``nbytes`` of marshalling copy under ``path`` (a
+        :class:`CopyStats` field), attributed to ``owner`` (defaults to
+        the dispatching tenant via TLS)."""
+        n = int(nbytes)
+        if n <= 0:
+            return
+        if owner is None:
+            owner = getattr(self._copy_tls, "owner", None)
+        with self.copies.lock:
+            s = self.copies.stats
+            setattr(s, path, getattr(s, path) + n)
+            s.events += 1
+            if owner is not None:
+                s.per_tenant[owner] = s.per_tenant.get(owner, 0) + n
 
     def register_fixed(self, buf) -> int:
         """Pin a buffer into the fixed-buffer table; returns its index
@@ -117,34 +177,69 @@ class SyscallTable:
         return 0
 
     def _sys_read(self, fd, buf_h, count, *_):
+        dst = self.heap.view(buf_h)
+        if _HAS_PREADV and dst is not None and 0 < count <= dst.size:
+            return os.readv(fd, [dst[:count]])      # in place, zero-copy
         buf = self.heap.resolve(buf_h)
         data = os.read(fd, count)
         n = len(data)
         np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
+        self.note_copy("resolve", n)
         return n
 
     def _sys_write(self, fd, buf_h, count, *_):
+        src = self.heap.view(buf_h)
+        if src is not None and 0 <= count <= src.size:
+            return os.write(fd, src[:count])        # from place, zero-copy
         buf = self.heap.resolve(buf_h)
-        return os.write(fd, bytes(np.asarray(buf)[:count].tobytes()))
+        data = np.asarray(buf)[:count].tobytes()
+        self.note_copy("resolve", len(data))
+        return os.write(fd, data)
 
     def _sys_pread(self, fd, buf_h, count, offset, dst_off=0, *_):
+        dst = self.heap.view(buf_h)
+        if _HAS_PREADV and dst is not None and 0 <= dst_off \
+                and 0 < count and dst_off + count <= dst.size:
+            return os.preadv(fd, [dst[dst_off:dst_off + count]], offset)
         buf = self.heap.resolve(buf_h)
         data = os.pread(fd, count, offset)
         n = len(data)
         np.asarray(buf)[dst_off:dst_off + n] = np.frombuffer(data, dtype=np.uint8)
+        self.note_copy("resolve", n)
         return n
 
     def _sys_pread_fixed(self, fd, buf_idx, count, offset, dst_off=0, *_):
         buf = self._fixed[buf_idx]     # registered buffer: no heap resolve
+        arr = np.asarray(buf)
+        if _HAS_PREADV and arr.dtype == np.uint8 and arr.ndim == 1 \
+                and arr.flags.c_contiguous and 0 <= dst_off \
+                and 0 < count and dst_off + count <= arr.size:
+            return os.preadv(fd, [arr[dst_off:dst_off + count]], offset)
         data = os.pread(fd, count, offset)
         n = len(data)
-        np.asarray(buf)[dst_off:dst_off + n] = np.frombuffer(data, dtype=np.uint8)
+        arr[dst_off:dst_off + n] = np.frombuffer(data, dtype=np.uint8)
+        self.note_copy("resolve", n)
         return n
 
     def _sys_pwrite(self, fd, buf_h, count, offset, src_off=0, *_):
+        src = self.heap.view(buf_h)
+        if src is not None and 0 <= src_off \
+                and src_off + count <= src.size:
+            return os.pwrite(fd, src[src_off:src_off + count], offset)
         buf = self.heap.resolve(buf_h)
-        view = np.asarray(buf)[src_off:src_off + count].tobytes()
-        return os.pwrite(fd, view, offset)
+        data = np.asarray(buf)[src_off:src_off + count].tobytes()
+        self.note_copy("resolve", len(data))
+        return os.pwrite(fd, data, offset)
+
+    def _sys_pwrite_fixed(self, fd, buf_idx, count, offset, src_off=0, *_):
+        buf = self._fixed[buf_idx]     # registered buffer: no heap resolve
+        arr = np.asarray(buf)
+        if arr.dtype == np.uint8 and arr.ndim == 1 and arr.flags.c_contiguous \
+                and 0 <= src_off and src_off + count <= arr.size:
+            return os.pwrite(fd, arr[src_off:src_off + count], offset)
+        data = arr[src_off:src_off + count].tobytes()
+        self.note_copy("resolve", len(data))
+        return os.pwrite(fd, data, offset)
 
     # ---- network (UDP, as in the paper's echo server §7.3) -------------------
     def _sys_socket(self, family, type_, proto, *_):
@@ -160,25 +255,55 @@ class SyscallTable:
         s.bind(("127.0.0.1", port))
         return 0
 
-    def _sys_sendto(self, fd, buf_h, count, port, *_):
+    def _sys_sendto(self, fd, buf_h, count, port, src_off=0, *_):
         s = self._sockets[fd]
+        src = self.heap.view(buf_h)
+        if src is not None and 0 <= src_off \
+                and src_off + count <= src.size:
+            return s.sendto(src[src_off:src_off + count], ("127.0.0.1", port))
         buf = self.heap.resolve(buf_h)
-        return s.sendto(np.asarray(buf)[:count].tobytes(), ("127.0.0.1", port))
+        data = np.asarray(buf)[src_off:src_off + count].tobytes()
+        self.note_copy("resolve", len(data))
+        return s.sendto(data, ("127.0.0.1", port))
+
+    def _sys_sendto_fixed(self, fd, buf_idx, count, port, src_off=0, *_):
+        s = self._sockets[fd]
+        buf = self._fixed[buf_idx]     # registered buffer: no heap resolve
+        arr = np.asarray(buf)
+        if arr.dtype == np.uint8 and arr.ndim == 1 and arr.flags.c_contiguous \
+                and 0 <= src_off and src_off + count <= arr.size:
+            return s.sendto(arr[src_off:src_off + count], ("127.0.0.1", port))
+        data = arr[src_off:src_off + count].tobytes()
+        self.note_copy("resolve", len(data))
+        return s.sendto(data, ("127.0.0.1", port))
 
     def _sys_recvfrom(self, fd, buf_h, count, *_):
         s = self._sockets[fd]
+        dst = self.heap.view(buf_h)
+        # recvfrom_into(buf, 0) means "fill the whole buffer" — only take
+        # the in-place path for a positive count that fits the extent
+        if dst is not None and 0 < count <= dst.size:
+            n, _addr = s.recvfrom_into(dst[:count], count)
+            return n
         data, _addr = s.recvfrom(count)
         buf = self.heap.resolve(buf_h)
         n = len(data)
         np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
+        self.note_copy("resolve", n)
         return n
 
     def _sys_recvfrom_fixed(self, fd, buf_idx, count, *_):
         s = self._sockets[fd]
-        data, _addr = s.recvfrom(count)
         buf = self._fixed[buf_idx]     # registered buffer: no heap resolve
+        arr = np.asarray(buf)
+        if arr.dtype == np.uint8 and arr.ndim == 1 and arr.flags.c_contiguous \
+                and 0 < count <= arr.size:
+            n, _addr = s.recvfrom_into(arr[:count], count)
+            return n
+        data, _addr = s.recvfrom(count)
         n = len(data)
-        np.asarray(buf)[:n] = np.frombuffer(data, dtype=np.uint8)
+        arr[:n] = np.frombuffer(data, dtype=np.uint8)
+        self.note_copy("resolve", n)
         return n
 
     # ---- memory ----------------------------------------------------------------
@@ -231,4 +356,6 @@ def make_default_table(heap: HostHeap | None = None,
     t.register(Sys.ECHO, t._sys_echo)
     t.register(Sys.PREAD64_FIXED, t._sys_pread_fixed)
     t.register(Sys.RECVFROM_FIXED, t._sys_recvfrom_fixed)
+    t.register(Sys.PWRITE64_FIXED, t._sys_pwrite_fixed)
+    t.register(Sys.SENDTO_FIXED, t._sys_sendto_fixed)
     return t

@@ -85,6 +85,32 @@ class Tenant:
         # mutation and snapshot the same lock (trace.Counters discipline)
         self.counters = Counters(TenantStats())
         self.stats = self.counters.stats
+        # data-plane identity: Genesys.tenant() wires the shared heap so
+        # per-tenant buffers (arena extents) are tracked here and released
+        # on retire — tenant churn cannot leak extents
+        self.heap = None
+        self._buffers: list[int] = []
+
+    # -- per-tenant buffers ------------------------------------------------------
+    def new_buffer(self, nbytes: int) -> int:
+        """Carve a tracked arena buffer owned by this tenant; everything
+        carved here is released by :meth:`release_buffers` when the tenant
+        retires (Genesys.close_tenant) — the audited fix for serving paths
+        that registered per-request buffers and never released them."""
+        if self.heap is None:
+            raise RuntimeError(f"tenant {self.name!r} has no heap wired")
+        h = self.heap.new_buffer(int(nbytes))
+        self._buffers.append(h)
+        return h
+
+    def release_buffers(self) -> None:
+        """Release every tracked buffer (idempotent — release of a dead
+        handle is a no-op by the heap contract)."""
+        if self.heap is None:
+            return
+        bufs, self._buffers = self._buffers, []
+        for h in bufs:
+            self.heap.release(h)
 
     # -- submission ------------------------------------------------------------
     def submit(self, calls, *, want_cqe: bool = False, hw_id: int = 0,
@@ -170,6 +196,7 @@ class Tenant:
         :meth:`Genesys.close_tenant`, which also detaches the ring from
         the shared poller group and reclaims the slot partition."""
         self.ring.close()
+        self.release_buffers()
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Tenant({self.name!r}, w={self.weight}, "

@@ -40,6 +40,14 @@ Ring submissions always use non-blocking area slots: the slot recycles the
 moment the handler returns (PROCESSING -> FREE) and the return value
 travels in the Completion/CQE. Nothing ever spins on slot state, which is
 why the ring path needs neither interrupts nor the FINISHED handshake.
+
+Data plane: buffer args in SQE payloads are heap handles. Under the
+default registered arena (genesys.arena) a handle IS a FIXED-style
+reference — generation-tagged extent index in one u64 — so every ring
+call gets registered-buffer addressing (lock-free resolve, in-place
+completion) without the explicit ``register_buffers()`` step; the
+``*_FIXED`` sysnos (including the gather-side ``PWRITE64_FIXED`` /
+``SENDTO_FIXED``) remain for pinned table indices.
 """
 from __future__ import annotations
 

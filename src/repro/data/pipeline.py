@@ -139,18 +139,22 @@ class GenesysDataLoader:
                            p.nbytes, p.offset, blocking=True)
         buf = np.asarray(self.gsys.heap.resolve(p.buf_handle))
         self.stats["bytes"] += p.nbytes
-        arr = buf.view(np.uint32).reshape(self.batch, self.seq + 1)
-        # safe even if a straggling original read is still queued: handles
-        # are never reused, so its late dispatch resolves to a dead handle
-        # and returns -EIO instead of touching anyone else's buffer
-        self.gsys.heap.release(p.buf_handle)
-        return arr
+        # NOTE: this is a view into the handle's buffer — the caller
+        # (next_batch) copies it out and only THEN releases the handle.
+        # A released arena extent returns to the free list for re-carving,
+        # so a view must never outlive its handle.
+        return buf.view(np.uint32).reshape(self.batch, self.seq + 1)
 
     def next_batch(self) -> dict:
         """Returns {"tokens": [B,S] int32, "labels": [B,S] int32}."""
         p = self._pending.pop(0)
         self._issue()
-        arr = self._wait(p).astype(np.int64)
+        arr = self._wait(p).astype(np.int64)   # copies out of the buffer
+        # release only after the copy; a straggling redundant read is
+        # still safe: generation-tagged handles are never revived, so its
+        # late dispatch resolves dead -> -EIO instead of touching anyone
+        # else's re-carved extent
+        self.gsys.heap.release(p.buf_handle)
         return {
             "tokens": arr[:, :-1].astype(np.int32),
             "labels": arr[:, 1:].astype(np.int32),

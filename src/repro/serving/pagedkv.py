@@ -166,8 +166,7 @@ class PagedKVPool:
             [(Sys.MMAP, 0, self._block_bytes)] * self.n_blocks)
         self._addrs = [c.result() for c in comps]
         if spill_path is not None:
-            ph = gsys.heap.register(np.frombuffer(
-                spill_path.encode(), dtype=np.uint8).copy())
+            ph = gsys.heap.register_bytes(spill_path.encode())
             self._spill_fd = self._tenant.call(
                 Sys.OPEN, ph, os.O_RDWR | os.O_CREAT, 0o644)
             gsys.heap.release(ph)
@@ -224,7 +223,9 @@ class PagedKVPool:
                 f"extractor returned {payload.nbytes} bytes, expected "
                 f"{self._block_bytes}")
         slot = self._spill_free.popleft()
-        bh = self._gsys.heap.register(payload.copy())
+        # one staging copy into an arena extent; the PWRITE64 itself goes
+        # out zero-copy off the extent (in-place write handler)
+        bh = self._gsys.heap.register_bytes(payload)
         try:
             n = self._tenant.call(Sys.PWRITE64, self._spill_fd, bh,
                                   self._block_bytes,
@@ -268,7 +269,9 @@ class PagedKVPool:
         for src, h in live:
             if src != dst:
                 # relocate through the registered staging buffer: one
-                # PREAD64_FIXED + one PWRITE64 per surviving extent; live
+                # PREAD64_FIXED + one PWRITE64_FIXED per surviving extent
+                # — both directions index the pinned stage directly, no
+                # copy-out/register/release round trip per block; live
                 # slots are sorted ascending so dst never passes src and
                 # no unmoved extent can be overwritten
                 n = self._tenant.call(Sys.PREAD64_FIXED, self._spill_fd,
@@ -278,14 +281,9 @@ class PagedKVPool:
                     self._by_hash.pop(h, None)
                     self._note_spill_live(-1)
                     continue
-                bh = self._gsys.heap.register(
-                    np.asarray(self._stage)[:self._block_bytes].copy())
-                try:
-                    w = self._tenant.call(Sys.PWRITE64, self._spill_fd, bh,
-                                          self._block_bytes,
-                                          dst * self._block_bytes)
-                finally:
-                    self._gsys.heap.release(bh)
+                w = self._tenant.call(Sys.PWRITE64_FIXED, self._spill_fd,
+                                      self._stage_idx, self._block_bytes,
+                                      dst * self._block_bytes)
                 if w != self._block_bytes:
                     self._by_hash.pop(h, None)
                     self._note_spill_live(-1)

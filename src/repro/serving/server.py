@@ -136,6 +136,14 @@ class GenesysUdpServer:
         self._wall_hist = gsys.metrics.histogram(
             "genesys_request_wall_us", "per-request serve wall time (µs)")
         self._pending_handles: list[int] = []
+        # reusable receive staging: one arena extent per batch position,
+        # carved ONCE — RECVFROM lands each datagram in place (zero-copy
+        # under HostArena) and poll_requests returns borrowed views instead
+        # of per-datagram new_buffer/copy/release (the UDP double-copy fix)
+        self._rx_handles = [gsys.heap.new_buffer(payload)
+                            for _ in range(max_batch)]
+        self._rx_bufs = [np.asarray(gsys.heap.resolve(h))
+                         for h in self._rx_handles]
 
     @property
     def stats(self) -> ServeStats:
@@ -153,7 +161,11 @@ class GenesysUdpServer:
         the idle timeout; follow-ups only wait the short batching window so
         a lone request is answered immediately. ``idle_wait`` overrides the
         first-receive wait — the continuous engine polls with a tiny wait
-        while slots are decoding so admission never stalls the batch."""
+        while slots are decoding so admission never stalls the batch.
+
+        Returned arrays are views of the server's staging extents, valid
+        until the NEXT poll — every consumer (parse_request, reply,
+        _maybe_stats) copies what it keeps within the same iteration."""
         out = []
         sock = self.gsys.table._sockets[self.fd]
         idle_timeout = sock.gettimeout()
@@ -161,16 +173,15 @@ class GenesysUdpServer:
             sock.settimeout(idle_wait)
         try:
             while len(out) < self.max_batch:
-                bh = self.gsys.heap.new_buffer(self.payload)
-                n = self._call(Sys.RECVFROM, self.fd, bh, self.payload)
+                i = len(out)        # control ops below don't consume a slot
+                n = self._call(Sys.RECVFROM, self.fd, self._rx_handles[i],
+                               self.payload)
                 if n > 0:
-                    req = np.asarray(self.gsys.heap.resolve(bh))[:n].copy()
+                    req = self._rx_bufs[i][:n]
                     if self._maybe_stats(req):
-                        self.gsys.heap.release(bh)
                         continue      # control op, not a serving request
                     out.append(req)
                     sock.settimeout(self.window)
-                self.gsys.heap.release(bh)
                 if n <= 0:
                     break
         finally:
@@ -218,14 +229,22 @@ class GenesysUdpServer:
             text = text[:max(0, cut)] + b"\n# truncated\n"
         return text
 
-    def reply(self, payloads: list[bytes], port: int) -> None:
+    # async sends hold their payload extents alive until a drain barrier;
+    # past this many outstanding handles, reply() forces one so a long-
+    # running server can't grow the pending list (and the arena) unboundedly
+    PENDING_RELEASE_THRESHOLD = 1024
+
+    def reply(self, payloads, port: int) -> None:
+        """Send ``payloads`` (bytes or uint8 arrays) to ``port``. Each
+        payload is staged ONCE into an arena extent (register_bytes, the
+        "reply" copy path) and SENDTO transmits straight off the extent —
+        no frombuffer().copy() + tobytes() round trip per send."""
         if self.use_ring:
             # ring fast path: the whole reply batch is one multi-entry
             # submission; sends complete out of band, drain() is the barrier
             calls = []
             for p in payloads:
-                bh = self.gsys.heap.register(
-                    np.frombuffer(p, dtype=np.uint8).copy())
+                bh = self.gsys.heap.register_bytes(p, path="reply")
                 self._pending_handles.append(bh)
                 calls.append((Sys.SENDTO, self.fd, bh, len(p), port))
             if self.use_tenants:
@@ -236,14 +255,20 @@ class GenesysUdpServer:
                 self._tx[port % self.tx_shards].submit(calls)
             else:
                 self.gsys.ring_submit(calls)
+            self._maybe_release_pending()
             return
         for p in payloads:
-            bh = self.gsys.heap.register(
-                np.frombuffer(p, dtype=np.uint8).copy())
+            bh = self.gsys.heap.register_bytes(p, path="reply")
             self.gsys.call(Sys.SENDTO, self.fd, bh, len(p), port,
                            blocking=False)   # producer role: weak, non-block
             # handle stays alive until the next drain (async send reads it)
             self._pending_handles.append(bh)
+        self._maybe_release_pending()
+
+    def _maybe_release_pending(self) -> None:
+        if len(self._pending_handles) > self.PENDING_RELEASE_THRESHOLD:
+            self.gsys.drain()
+            self._release_pending()
 
     def _release_pending(self) -> None:
         for bh in self._pending_handles:
@@ -261,7 +286,9 @@ class GenesysUdpServer:
             reqs = self.poll_requests()
             if not reqs:
                 continue
-            self.reply([r.tobytes() for r in reqs], reply_port)
+            # the echo payloads are staging-extent views: reply() stages
+            # each into its send extent directly, no tobytes() detour
+            self.reply(reqs, reply_port)
             self.counters.add(requests=len(reqs), batches=1)
             done += 1
         self.gsys.drain()
@@ -525,6 +552,11 @@ class GenesysUdpServer:
 
     def close(self) -> None:
         self._call(Sys.CLOSE, self.fd)
+        self._release_pending()
+        for h in self._rx_handles:
+            self.gsys.heap.release(h)
+        self._rx_handles = []
+        self._rx_bufs = []
 
 
 def cache_batch_size(cache) -> int:

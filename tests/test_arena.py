@@ -1,0 +1,416 @@
+"""genesys.arena: zero-copy data plane correctness.
+
+The contract under test (ISSUE acceptance): the arena path is
+*byte-identical* to the seed dict-of-objects HostHeap for pread /
+recvfrom / pwrite — including short reads at EOF and out-of-bounds
+fallbacks — while copying ~0 marshalling bytes; fused reads with
+aliased destinations keep last-write-wins; carve/release reuse never
+leaks stale bytes and stale handles resolve to -EIO, never to somebody
+else's extent; the new fixed-variant writes (PWRITE64_FIXED /
+SENDTO_FIXED) and the adjacency-only write fusion rules hold.
+"""
+import os
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core.genesys import (Coalescer, Genesys, GenesysConfig, HostArena,
+                                HostHeap, Sys, SyscallRing,
+                                make_default_table)
+from repro.core.genesys.arena import ARENA_BIT
+from tests.proptest import for_all
+
+FILE_BYTES = 1 << 14
+
+
+# ---------------------------------------------------------------- helpers ----
+def _tables():
+    """A (arena-backed, dict-backed) table pair — the oracle setup."""
+    return (make_default_table(HostArena(segment_bytes=1 << 16)),
+            make_default_table(HostHeap()))
+
+
+def _mkfile(tmp_path, rng, name="data.bin", nbytes=FILE_BYTES):
+    data = rng.integers(0, 256, nbytes, dtype=np.uint8)
+    path = str(tmp_path / name)
+    with open(path, "wb") as f:
+        f.write(data.tobytes())
+    return path, data
+
+
+def _udp_pair(table):
+    """(send fd, recv fd, recv port) through the table's socket registry."""
+    sfd = table.dispatch(Sys.SOCKET, [0, 0, 0, 0, 0, 0])
+    rfd = table.dispatch(Sys.SOCKET, [0, 0, 0, 0, 0, 0])
+    assert sfd >= 0 and rfd >= 0
+    port = table._sockets[rfd].getsockname()[1]
+    if port == 0:
+        table._sockets[rfd].bind(("127.0.0.1", 0))
+        port = table._sockets[rfd].getsockname()[1]
+    table._sockets[rfd].settimeout(5.0)
+    return sfd, rfd, port
+
+
+def _close_udp(table, *fds):
+    for fd in fds:
+        table.dispatch(Sys.CLOSE, [fd, 0, 0, 0, 0, 0])
+
+
+# ------------------------------------------------- handle / lifetime rules ----
+def test_arena_handles_are_disjoint_from_dict_handles():
+    heap = HostArena()
+    ah = heap.new_buffer(64)
+    fh = heap.register(b"foreign")
+    assert ah & ARENA_BIT and not (fh & ARENA_BIT)
+    assert heap.is_arena_handle(ah) and not heap.is_arena_handle(fh)
+    # both resolve through the one surface; foreign stays legacy (no view)
+    assert heap.resolve(ah).size == 64
+    assert bytes(heap.resolve(fh)) == b"foreign"
+    assert heap.view(fh) is None and heap.locate(fh) is None
+    got = heap.resolve_many([ah, fh])
+    assert set(got) == {ah, fh}
+    assert len(heap) == 2
+    heap.release(ah)
+    heap.release(fh)
+    assert len(heap) == 0
+
+
+def test_release_is_idempotent_and_stale_handles_never_revive():
+    heap = HostArena()
+    h1 = heap.new_buffer(128)
+    heap.view(h1)[:] = 0xAB
+    heap.release(h1)
+    heap.release(h1)                      # idempotent: documented no-op
+    h2 = heap.carve(128)                  # reuses the extent, new generation
+    assert h2 != h1
+    heap.view(h2)[:] = 0xCD
+    heap.release(h1)                      # stale: must NOT free h2's extent
+    assert heap.view(h1) is None
+    with pytest.raises(KeyError):
+        heap.resolve(h1)
+    assert (heap.view(h2) == 0xCD).all()  # h2 untouched by the stale release
+    assert heap.arena_stats()["reused"] == 1
+
+
+def test_carve_reuse_leaks_no_stale_bytes():
+    heap = HostArena()
+    h1 = heap.new_buffer(256)
+    heap.view(h1)[:] = 0xEE
+    heap.release(h1)
+    h2 = heap.new_buffer(256)             # same size class -> same extent
+    assert not heap.view(h2).any()        # zero-filled across reuse
+    # size-class rounding never hands back a view larger than asked
+    h3 = heap.carve(100)
+    assert heap.view(h3).size == 100
+
+
+def test_stale_arena_handle_is_eio_through_the_dispatch_funnel(tmp_path):
+    """The KeyError a stale generation raises nets to -EIO at the
+    executor's dispatch funnel — a straggler sees an error, never bytes."""
+    g = Genesys(GenesysConfig())
+    try:
+        rng = np.random.default_rng(3)
+        path, _data = _mkfile(tmp_path, rng)
+        fd = g.call(Sys.OPEN, g.heap.register_bytes(path.encode()),
+                    os.O_RDONLY, 0)
+        h = g.heap.new_buffer(64)
+        g.heap.release(h)
+        assert g.call(Sys.PREAD64, fd, h, 64, 0) == -5
+        g.call(Sys.CLOSE, fd)
+    finally:
+        g.shutdown()
+
+
+# ----------------------------------------------- arena vs HostHeap parity ----
+@for_all(n_cases=40, seed=11)
+def test_pread_parity_with_dict_heap(rng):
+    arena_t, dict_t = _tables()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        from pathlib import Path
+        path, data = _mkfile(Path(d), rng, nbytes=1 << 12)
+        fds = []
+        for t in (arena_t, dict_t):
+            ph = t.heap.register_bytes(path.encode())
+            fds.append(t.dispatch(Sys.OPEN, [ph, os.O_RDONLY, 0, 0, 0, 0]))
+        size = 1 << 12
+        # offsets straddling EOF exercise the short-read split; dst_off
+        # exercises in-place placement; bufsz < dst_off+count exercises the
+        # legacy overflow fallback staying byte-identical
+        count = int(rng.integers(1, 600))
+        offset = int(rng.integers(0, size + 200))
+        bufsz = int(rng.integers(count, count + 300))
+        dst_off = int(rng.integers(0, max(1, bufsz - count + 50)))
+        rets, bufs = [], []
+        for t, fd in zip((arena_t, dict_t), fds):
+            h = t.heap.new_buffer(bufsz)
+            try:
+                r = t.dispatch(Sys.PREAD64,
+                               [fd, h, count, offset, dst_off, 0])
+            except Exception:
+                r = -5       # what the executor's dispatch funnel nets to
+            rets.append(r)
+            bufs.append(np.asarray(t.heap.resolve(h)).copy())
+        assert rets[0] == rets[1]
+        assert (bufs[0] == bufs[1]).all()
+        if rets[0] > 0:   # and both match the file bytes, not just each other
+            assert bytes(bufs[0][dst_off:dst_off + rets[0]]) == \
+                bytes(data.tobytes()[offset:offset + rets[0]])
+        for t, fd in zip((arena_t, dict_t), fds):
+            t.dispatch(Sys.CLOSE, [fd, 0, 0, 0, 0, 0])
+
+
+@for_all(n_cases=25, seed=12)
+def test_pwrite_parity_with_dict_heap(rng):
+    arena_t, dict_t = _tables()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        payload = rng.integers(0, 256, int(rng.integers(1, 800)),
+                               dtype=np.uint8)
+        src_off = int(rng.integers(0, 64))
+        offset = int(rng.integers(0, 512))
+        outs = []
+        for name, t in (("a.bin", arena_t), ("b.bin", dict_t)):
+            path = os.path.join(d, name)
+            ph = t.heap.register_bytes(path.encode())
+            fd = t.dispatch(Sys.OPEN, [ph, os.O_CREAT | os.O_RDWR, 0o644,
+                                       0, 0, 0])
+            h = t.heap.new_buffer(src_off + payload.size)
+            np.asarray(t.heap.resolve(h))[src_off:] = payload
+            r = t.dispatch(Sys.PWRITE64, [fd, h, payload.size, offset,
+                                          src_off, 0])
+            assert r == payload.size
+            t.dispatch(Sys.CLOSE, [fd, 0, 0, 0, 0, 0])
+            with open(path, "rb") as f:
+                outs.append(f.read())
+        assert outs[0] == outs[1]
+        assert outs[0][offset:] == payload.tobytes()
+
+
+def test_recvfrom_parity_with_dict_heap():
+    for table in _tables():
+        sfd, rfd, port = _udp_pair(table)
+        try:
+            msg = b"zero-copy datagram"
+            sh = table.heap.register_bytes(msg)
+            assert table.dispatch(Sys.SENDTO,
+                                  [sfd, sh, len(msg), port, 0, 0]) == len(msg)
+            # count > datagram size: retval is the datagram, not the count
+            h = table.heap.new_buffer(64)
+            n = table.dispatch(Sys.RECVFROM, [rfd, h, 64, 0, 0, 0])
+            assert n == len(msg)
+            got = np.asarray(table.heap.resolve(h))
+            assert bytes(got[:n]) == msg
+            assert not got[n:].any()      # untouched tail stays zeroed
+        finally:
+            _close_udp(table, sfd, rfd)
+
+
+def test_fixed_variant_writes():
+    """PWRITE64_FIXED / SENDTO_FIXED: pinned-index addressing, no heap."""
+    table, _ = _tables()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        pinned = np.frombuffer(b"0123456789abcdef", dtype=np.uint8).copy()
+        idx = table.register_fixed(pinned)
+        path = os.path.join(d, "fixed.bin")
+        ph = table.heap.register_bytes(path.encode())
+        fd = table.dispatch(Sys.OPEN, [ph, os.O_CREAT | os.O_RDWR, 0o644,
+                                       0, 0, 0])
+        assert table.dispatch(Sys.PWRITE64_FIXED,
+                              [fd, idx, 8, 0, 4, 0]) == 8    # src_off=4
+        table.dispatch(Sys.CLOSE, [fd, 0, 0, 0, 0, 0])
+        with open(path, "rb") as f:
+            assert f.read() == b"456789ab"
+    sfd, rfd, port = _udp_pair(table)
+    try:
+        assert table.dispatch(Sys.SENDTO_FIXED,
+                              [sfd, idx, 6, port, 10, 0]) == 6
+        h = table.heap.new_buffer(32)
+        n = table.dispatch(Sys.RECVFROM, [rfd, h, 32, 0, 0, 0])
+        assert bytes(table.heap.view(h)[:n]) == b"abcdef"
+    finally:
+        _close_udp(table, sfd, rfd)
+
+
+def test_arena_hot_path_copies_zero_bytes(tmp_path):
+    """The success metric: resolve-path marshalling bytes ~0 on arena,
+    strictly positive on the dict heap for the same workload."""
+    rng = np.random.default_rng(5)
+    path, _ = _mkfile(tmp_path, rng)
+    for table, expect_zero in zip(_tables(), (True, False)):
+        ph = table.heap.register_bytes(path.encode())
+        fd = table.dispatch(Sys.OPEN, [ph, os.O_RDONLY, 0, 0, 0, 0])
+        h = table.heap.new_buffer(4096)
+        for _ in range(16):
+            assert table.dispatch(Sys.PREAD64,
+                                  [fd, h, 4096, 0, 0, 0]) == 4096
+        table.dispatch(Sys.CLOSE, [fd, 0, 0, 0, 0, 0])
+        resolved = table.copies.snapshot()["resolve"]
+        assert (resolved == 0) if expect_zero else (resolved == 16 * 4096)
+
+
+# -------------------------------------------------------- fused semantics ----
+@pytest.fixture()
+def gsys():
+    g = Genesys(GenesysConfig(n_slots=4096))
+    yield g
+    g.shutdown()
+
+
+def _fused_ring(g, **kw) -> SyscallRing:
+    return SyscallRing(g.area, g.executor, sq_depth=256, start_poller=False,
+                       fuse=Coalescer(**kw))
+
+
+def _run_bundle(ring, calls):
+    comps = ring.submit_many(calls)
+    assert ring.process_pending(max_n=len(calls)) == len(calls)
+    return [c.result(timeout=10) for c in comps]
+
+
+def _open(g, path):
+    fd = g.call(Sys.OPEN, g.heap.register_bytes(path.encode()),
+                os.O_RDONLY, 0)
+    assert fd >= 0
+    return fd
+
+
+def test_fused_aliased_destinations_last_write_wins(gsys, tmp_path):
+    """Two fused reads landing in ONE buffer at overlapping dst ranges:
+    the later-submitted member's bytes must win, exactly as the unfused
+    serial dispatch would leave the buffer."""
+    rng = np.random.default_rng(9)
+    path, data = _mkfile(tmp_path, rng)
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    h = gsys.heap.new_buffer(512)
+    # overlapping file ranges (so they merge) AND overlapping dst ranges
+    calls = [(Sys.PREAD64, fd, h, 256, 0, 0),
+             (Sys.PREAD64, fd, h, 256, 128, 64)]
+    rets = _run_bundle(ring, calls)
+    assert rets == [256, 256]
+    assert ring.fuse.stats.read_groups == 1
+    got = np.asarray(gsys.heap.resolve(h)).copy()
+    oracle = np.zeros(512, dtype=np.uint8)
+    oracle[0:256] = data[0:256]
+    oracle[64:320] = data[128:384]        # submitted later: wins the overlap
+    assert (got == oracle).all()
+    gsys.call(Sys.CLOSE, fd)
+
+
+def test_fused_scatter_vectorizes_small_disjoint_members(gsys, tmp_path):
+    """A wide group of small disjoint arena members takes the vectorized
+    scatter and stays bit-exact with the file."""
+    rng = np.random.default_rng(10)
+    path, data = _mkfile(tmp_path, rng)
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    k, sz = 64, 64
+    handles = [gsys.heap.new_buffer(sz) for _ in range(k)]
+    calls = [(Sys.PREAD64, fd, h, sz, i * sz, 0)
+             for i, h in enumerate(handles)]
+    rets = _run_bundle(ring, calls)
+    assert rets == [sz] * k
+    assert ring.fuse.stats.read_groups == 1
+    assert ring.fuse.stats.vector_scatters == 1
+    for i, h in enumerate(handles):
+        assert (np.asarray(gsys.heap.resolve(h))
+                == data[i * sz:(i + 1) * sz]).all()
+    # the scatter out of scratch is the one counted copy on this path
+    assert gsys.table.copies.snapshot()["scatter"] == k * sz
+    gsys.call(Sys.CLOSE, fd)
+
+
+def test_fused_short_read_split_matches_unfused(gsys, tmp_path):
+    rng = np.random.default_rng(13)
+    path, data = _mkfile(tmp_path, rng, nbytes=1000)
+    fd = _open(gsys, path)
+    ring = _fused_ring(gsys)
+    hs = [gsys.heap.new_buffer(400) for _ in range(3)]
+    # member 0 fully inside, member 1 straddles EOF, member 2 past EOF
+    calls = [(Sys.PREAD64, fd, hs[0], 400, 500, 0),
+             (Sys.PREAD64, fd, hs[1], 400, 850, 0),
+             (Sys.PREAD64, fd, hs[2], 400, 1200, 0)]
+    rets = _run_bundle(ring, calls)
+    assert rets == [400, 150, 0]
+    assert (np.asarray(gsys.heap.resolve(hs[0])) == data[500:900]).all()
+    assert (np.asarray(gsys.heap.resolve(hs[1]))[:150]
+            == data[850:1000]).all()
+    gsys.call(Sys.CLOSE, fd)
+
+
+def test_write_fusion_adjacent_merges_overlap_stays_serial(gsys, tmp_path):
+    wpath = str(tmp_path / "w.bin")
+    fd = gsys.call(Sys.OPEN, gsys.heap.register_bytes(wpath.encode()),
+                   os.O_CREAT | os.O_RDWR, 0o644)
+    ring = _fused_ring(gsys)
+    rng = np.random.default_rng(21)
+    chunks = [rng.integers(0, 256, 256, dtype=np.uint8) for _ in range(4)]
+    hs = []
+    for c in chunks:
+        h = gsys.heap.new_buffer(256)
+        np.asarray(gsys.heap.resolve(h))[:] = c
+        hs.append(h)
+    # strictly adjacent run: one merged pwrite
+    calls = [(Sys.PWRITE64, fd, h, 256, i * 256, 0)
+             for i, h in enumerate(hs)]
+    assert _run_bundle(ring, calls) == [256] * 4
+    assert ring.fuse.stats.write_groups == 1
+    assert ring.fuse.stats.bytes_gathered == 1024
+    with open(wpath, "rb") as f:
+        assert f.read() == b"".join(c.tobytes() for c in chunks)
+    # overlapping writes on one fd: order-dependent -> the fd stays serial,
+    # and the serial submission order decides the overlap
+    calls = [(Sys.PWRITE64, fd, hs[0], 256, 0, 0),
+             (Sys.PWRITE64, fd, hs[1], 256, 128, 0)]
+    assert _run_bundle(ring, calls) == [256, 256]
+    assert ring.fuse.stats.write_groups == 1      # unchanged: no new group
+    with open(wpath, "rb") as f:
+        head = f.read(384)
+    assert head[:128] == chunks[0].tobytes()[:128]
+    assert head[128:384] == chunks[1].tobytes()
+    gsys.call(Sys.CLOSE, fd)
+
+
+def test_write_fusion_vetoed_by_same_fd_read(gsys, tmp_path):
+    """A read on the fd in the same bundle keeps that fd's writes serial
+    (the read must not observe a hoisted merged write)."""
+    wpath = str(tmp_path / "rw.bin")
+    with open(wpath, "wb") as f:
+        f.write(b"\xff" * 1024)
+    fd = gsys.call(Sys.OPEN, gsys.heap.register_bytes(wpath.encode()),
+                   os.O_CREAT | os.O_RDWR, 0o644)
+    ring = _fused_ring(gsys)
+    h1, h2, rh = (gsys.heap.new_buffer(256) for _ in range(3))
+    np.asarray(gsys.heap.resolve(h1))[:] = 1
+    np.asarray(gsys.heap.resolve(h2))[:] = 2
+    calls = [(Sys.PWRITE64, fd, h1, 256, 0, 0),
+             (Sys.PWRITE64, fd, h2, 256, 256, 0),
+             (Sys.PREAD64, fd, rh, 256, 0, 0)]
+    rets = _run_bundle(ring, calls)
+    assert rets == [256, 256, 256]
+    assert ring.fuse.stats.write_groups == 0
+    assert (np.asarray(gsys.heap.resolve(rh)) == 1).all()
+    gsys.call(Sys.CLOSE, fd)
+
+
+def test_tenant_buffers_release_with_tenant(gsys):
+    t = gsys.tenant("bufs")
+    hs = [t.new_buffer(64) for _ in range(4)]
+    assert all(gsys.heap.view(h) is not None for h in hs)
+    gsys.close_tenant("bufs")
+    assert all(gsys.heap.view(h) is None for h in hs)
+
+
+def test_copies_surface_in_telemetry_and_metrics(gsys):
+    gsys.heap.register_bytes(b"x" * 100)          # one counted copy-in
+    snap = gsys.telemetry()
+    assert snap["copies"]["register"] >= 100
+    assert snap["arena"]["extents_live"] >= 1
+    reg = gsys.metrics
+    reg.tick()
+    text = reg.prometheus_text()
+    assert "genesys_bytes_copied_total" in text
+    assert 'path="register"' in text
